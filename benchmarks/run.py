@@ -1,0 +1,61 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+  table1_frameworks       - Table I analogue (execution-style comparison)
+  table2_mixed_precision  - Table II reproduction (Dx-Wy exploration)
+  adaptive_switch         - MDC runtime-adaptivity benchmark
+  roofline                - §Roofline table aggregated from dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes for CI-speed runs")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    full = not args.quick
+
+    failures = []
+
+    def section(name, fn):
+        if args.only and args.only != name:
+            return
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+
+    from benchmarks import (adaptive_switch, roofline_table,
+                            table1_frameworks, table2_mixed_precision)
+
+    section("table1_frameworks", lambda: [
+        print("table1_frameworks," + ",".join(f"{k}={v}" for k, v in r.items()))
+        for r in table1_frameworks.run(full)])
+    section("table2_mixed_precision", lambda: [
+        print("table2_mixed_precision," + ",".join(f"{k}={v}"
+                                                   for k, v in r.items()))
+        for r in table2_mixed_precision.run(full)])
+    section("adaptive_switch", lambda: [
+        print("adaptive_switch," + ",".join(f"{k}={v}" for k, v in r.items()))
+        for r in adaptive_switch.run(full)])
+    section("roofline", roofline_table.main)
+
+    if failures:
+        for name, err in failures:
+            print(f"BENCH FAILURE: {name}: {err}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Architecture registry: ``get_config(arch_id)`` and the assigned-arch list."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeConfig,
+    shapes_for,
+)
+
+# arch-id -> module name
+_REGISTRY: Dict[str, str] = {
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "whisper-base": "whisper_base",
+    "hymba-1.5b": "hymba_1_5b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "phi-3-vision-4.2b": "phi3_vision_4_2b",
+    "mamba2-1.3b": "mamba2_1_3b",
+}
+
+ARCH_IDS: List[str] = list(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch]}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}")
+
+
+def get_cnn_config():
+    from repro.configs.mnist_cnn import CONFIG
+    return CONFIG
+
+
+def all_cells():
+    """Every applicable (arch, shape) dry-run cell."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            yield arch, shape.name

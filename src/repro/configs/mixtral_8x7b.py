@@ -1,0 +1,20 @@
+"""mixtral-8x7b [moe] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000, 8e top-2, SWA.
+
+[arXiv:2401.04088; hf]
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    d_head=128,
+    rope_theta=1000000.0,
+    sliding_window=4096,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=14336),
+)

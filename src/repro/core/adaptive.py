@@ -1,0 +1,127 @@
+"""Multi-Dataflow Composer analogue: runtime-adaptive multi-precision accelerators.
+
+The paper's MDC merges several dataflow configurations into one reconfigurable
+accelerator whose actors/weights are shared between configurations, switched
+at runtime (e.g. drop precision when the energy budget is low).  TPU-native
+realization (DESIGN.md §2):
+
+* The *shared substrate* is one int8 master weight buffer + per-channel scales
+  (``quant.ptq.quantize_tree_native``).  Lower-precision working points are
+  *derived views* (nested truncation) of the master — zero extra parameter
+  memory per configuration, which is exactly the weight sharing the paper
+  targets for its future reconfigurable substrate.
+* ``switch_mode="static"``  -> one compiled executable per working point,
+  selected on the host (reconfiguration = picking a compiled function; no
+  weight reload — analogous to CG reconfiguration latency).
+* ``switch_mode="dynamic"`` -> a single executable with ``lax.switch`` over
+  the working points (reconfiguration = a traced integer; one HLO).
+* ``sharing_report()`` quantifies merged-vs-separate resources (the MDC
+  LUT-sharing story, in bytes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.ptq import (QuantizedParams, dequantize_tree,
+                             quant_memory_bytes, quantize_tree_native)
+
+
+@dataclass(frozen=True)
+class WorkingPoint:
+    """One merged configuration (a Pareto point from the exploration)."""
+    name: str
+    weight_bits: int            # 8 / 4 / 2 (derived views of the master)
+    act_dtype: str = "bfloat16"  # activation stream dtype
+
+
+class AdaptiveAccelerator:
+    """The merged multi-dataflow executable."""
+
+    def __init__(self, apply_fn: Callable, params: Dict[str, jax.Array],
+                 points: Sequence[WorkingPoint], quant_embeddings: bool = False):
+        """apply_fn(params, *inputs) -> outputs; params: full-precision tree."""
+        self.points = list(points)
+        self.apply_fn = apply_fn
+        self.qparams: QuantizedParams = quantize_tree_native(
+            params, quant_embeddings=quant_embeddings)
+        self._compiled: Dict[str, Callable] = {}
+
+    # -- static switching ---------------------------------------------------
+    def executable(self, point: WorkingPoint) -> Callable:
+        if point.name not in self._compiled:
+            bits = point.weight_bits
+            dt = jnp.dtype(point.act_dtype)
+
+            def run(qtree, *inputs, _bits=bits, _dt=dt):
+                qp = QuantizedParams(qtree["codes"], qtree["scales"],
+                                     qtree["passthrough"])
+                params = dequantize_tree(qp, _bits, _dt)
+                cast = tuple(x.astype(_dt) if jnp.issubdtype(x.dtype, jnp.floating)
+                             else x for x in inputs)
+                return self.apply_fn(params, *cast)
+
+            self._compiled[point.name] = jax.jit(run)
+        return self._compiled[point.name]
+
+    def __call__(self, point_name: str, *inputs):
+        pt = next(p for p in self.points if p.name == point_name)
+        return self.executable(pt)(self.qparams.tree(), *inputs)
+
+    # -- dynamic switching (one HLO, traced config id) -----------------------
+    def build_dynamic(self) -> Callable:
+        branches = []
+        for pt in self.points:
+            bits, dt = pt.weight_bits, jnp.dtype(pt.act_dtype)
+
+            def branch(qtree, inputs, _bits=bits, _dt=dt):
+                qp = QuantizedParams(qtree["codes"], qtree["scales"],
+                                     qtree["passthrough"])
+                params = dequantize_tree(qp, _bits, _dt)
+                cast = tuple(x.astype(_dt) if jnp.issubdtype(x.dtype, jnp.floating)
+                             else x for x in inputs)
+                out = self.apply_fn(params, *cast)
+                return jax.tree.map(lambda o: o.astype(jnp.float32), out)
+
+            branches.append(branch)
+
+        @jax.jit
+        def run(config_id, qtree, *inputs):
+            return jax.lax.switch(config_id, branches, qtree, inputs)
+
+        return run
+
+    # -- resource sharing report (MDC merge accounting) ----------------------
+    def sharing_report(self) -> Dict[str, float]:
+        merged = quant_memory_bytes(self.qparams, 8, packed=True)
+        separate = sum(quant_memory_bytes(self.qparams, p.weight_bits, packed=True)
+                       for p in self.points)
+        return {
+            "n_configs": len(self.points),
+            "merged_weight_bytes": merged,
+            "separate_weight_bytes": separate,
+            "sharing_ratio": separate / max(merged, 1),
+            "extra_bytes_per_config": 0.0,  # derived views: no extra storage
+        }
+
+
+@dataclass
+class RuntimePolicy:
+    """CPS-style runtime manager: pick the working point from the budget.
+
+    Mirrors the paper's scenario — "when a limited energy budget is left a
+    reduction in energy consumption is worth the cost of some accuracy loss".
+    """
+    points: List[WorkingPoint]
+    thresholds: List[float] = field(default_factory=list)  # descending budgets
+
+    def select(self, energy_budget_frac: float) -> WorkingPoint:
+        ths = self.thresholds or [1.0 - (i + 1) / len(self.points)
+                                  for i in range(len(self.points) - 1)]
+        for pt, th in zip(self.points[:-1], ths):
+            if energy_budget_frac > th:
+                return pt
+        return self.points[-1]

@@ -1,0 +1,82 @@
+"""End-to-end DesignFlow driver — the paper's Fig. 1, fully automated.
+
+ONNX-like model  ->  Reader (IR)  ->  per-target Writer  ->  [PTQ exploration]
+->  Multi-Dataflow compose  ->  deployable accelerator + reports.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ir import Graph
+from repro.core.writers.jax_writer import JaxWriter
+from repro.core.writers.stream_writer import StreamWriter
+from repro.core.writers.dist_writer import DistWriter
+from repro.core.adaptive import AdaptiveAccelerator, WorkingPoint
+from repro.quant.qtypes import DatatypeConfig
+from repro.quant.fixedpoint import zero_fraction
+from repro.quant.ptq import weight_qtype
+
+WRITERS = {"jax": JaxWriter, "stream": StreamWriter, "dist": DistWriter}
+
+
+@dataclass
+class FlowResult:
+    graph: Graph
+    writers: Dict[str, JaxWriter]
+    executables: Dict[str, Callable]
+    act_ranges: Dict[str, float]
+    stats: Dict[str, float] = field(default_factory=dict)
+
+
+class DesignFlow:
+    """``DesignFlow(graph).run(targets, dtconfig, calib)`` — Fig. 1 automated."""
+
+    def __init__(self, graph: Graph):
+        graph.validate()
+        self.graph = graph
+
+    def calibrate(self, *calib_inputs) -> Dict[str, float]:
+        """Run the float reference once, record per-FIFO activation ranges."""
+        w = JaxWriter(self.graph)
+        _, env = w.build(capture=True)(*calib_inputs)
+        return {k: float(jnp.max(jnp.abs(v)))
+                for k, v in env.items()
+                if hasattr(v, "dtype") and jnp.issubdtype(v.dtype, jnp.floating)}
+
+    def run(self, targets: Sequence[str] = ("jax",),
+            dtconfig: Optional[DatatypeConfig] = None,
+            calib_inputs: Optional[tuple] = None) -> FlowResult:
+        act_ranges: Dict[str, float] = {}
+        if calib_inputs is not None and dtconfig and dtconfig.act_bits < 32:
+            act_ranges = self.calibrate(*calib_inputs)
+        writers, exes = {}, {}
+        for t in targets:
+            w = WRITERS[t](self.graph, dtconfig, act_ranges)
+            writers[t] = w
+            exes[t] = w.build()
+        stats = {}
+        if dtconfig and dtconfig.weight_bits < 32:
+            zeros, total = 0.0, 0
+            for name, arr in self.graph.initializers.items():
+                if arr.ndim >= 2:
+                    qt = weight_qtype(jnp.asarray(arr), dtconfig.weight_bits)
+                    zeros += float(zero_fraction(jnp.asarray(arr), qt)) * arr.size
+                    total += arr.size
+            stats["zero_weight_frac"] = zeros / max(total, 1)
+        return FlowResult(self.graph, writers, exes, act_ranges, stats)
+
+    def compose_adaptive(self, points: Sequence[WorkingPoint],
+                         target: str = "stream") -> AdaptiveAccelerator:
+        """Merge working points over one shared-weight substrate (MDC step)."""
+        base = WRITERS[target](self.graph)
+
+        def apply_fn(params, *inputs):
+            g = Graph(self.graph.name, self.graph.nodes, self.graph.inputs,
+                      self.graph.outputs, params)
+            return WRITERS[target](g).build()(*inputs)
+
+        return AdaptiveAccelerator(apply_fn, dict(base.weights), points)

@@ -1,0 +1,132 @@
+"""ONNX-like graph IR — the ONNXParser intermediate format.
+
+The paper's Reader produces "an intermediate format with a list of objects
+that describes layers and connections of the ONNX model"; this module is that
+format.  Op semantics follow ONNX operator definitions.  The ``onnx`` package
+is unavailable offline, so serialization is ONNX-shaped JSON (graph topology +
+tensor metadata) with weights in an ``.npz`` sidecar.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field, asdict
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+SUPPORTED_OPS = {
+    "Conv", "MaxPool", "BatchNormalization", "Relu", "Gemm", "MatMul",
+    "Add", "Flatten", "Softmax", "Reshape", "Identity",
+}
+
+
+@dataclass
+class TensorInfo:
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+
+
+@dataclass
+class Node:
+    op: str
+    name: str
+    inputs: List[str]
+    outputs: List[str]
+    attrs: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.op not in SUPPORTED_OPS:
+            raise ValueError(f"unsupported op {self.op!r} (node {self.name})")
+
+
+@dataclass
+class Graph:
+    name: str
+    nodes: List[Node]
+    inputs: List[TensorInfo]
+    outputs: List[str]
+    initializers: Dict[str, np.ndarray] = field(default_factory=dict)
+
+    # ---- validation / ordering -------------------------------------------
+    def validate(self) -> None:
+        produced = {t.name for t in self.inputs} | set(self.initializers)
+        names = set()
+        for n in self.nodes:
+            if n.name in names:
+                raise ValueError(f"duplicate node name {n.name}")
+            names.add(n.name)
+        for n in self.topo_order():
+            for i in n.inputs:
+                if i not in produced:
+                    raise ValueError(f"node {n.name}: undefined input {i!r}")
+            produced.update(n.outputs)
+        for o in self.outputs:
+            if o not in produced:
+                raise ValueError(f"undefined graph output {o!r}")
+
+    def topo_order(self) -> List[Node]:
+        avail = {t.name for t in self.inputs} | set(self.initializers)
+        remaining = list(self.nodes)
+        order: List[Node] = []
+        while remaining:
+            progressed = False
+            for n in list(remaining):
+                if all(i in avail for i in n.inputs):
+                    order.append(n)
+                    avail.update(n.outputs)
+                    remaining.remove(n)
+                    progressed = True
+            if not progressed:
+                raise ValueError(
+                    f"graph has a cycle or missing producer; stuck at "
+                    f"{[n.name for n in remaining]}")
+        return order
+
+    def producer_of(self, tensor: str) -> Optional[Node]:
+        for n in self.nodes:
+            if tensor in n.outputs:
+                return n
+        return None
+
+    # ---- serialization ----------------------------------------------------
+    def to_json(self) -> str:
+        d = {
+            "name": self.name,
+            "nodes": [asdict(n) for n in self.nodes],
+            "inputs": [asdict(t) for t in self.inputs],
+            "outputs": self.outputs,
+            "initializers": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                             for k, v in self.initializers.items()},
+        }
+        return json.dumps(d, indent=1)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        if self.initializers:
+            np.savez(path + ".npz", **self.initializers)
+
+    @classmethod
+    def from_json(cls, text: str, weights: Optional[Dict[str, np.ndarray]] = None
+                  ) -> "Graph":
+        d = json.loads(text)
+        nodes = [Node(**n) for n in d["nodes"]]
+        inputs = [TensorInfo(t["name"], tuple(t["shape"]), t.get("dtype", "float32"))
+                  for t in d["inputs"]]
+        inits = dict(weights or {})
+        for k, meta in d.get("initializers", {}).items():
+            if k not in inits:
+                inits[k] = np.zeros(meta["shape"], dtype=meta["dtype"])
+        g = cls(d["name"], nodes, inputs, d["outputs"], inits)
+        g.validate()
+        return g
+
+    @classmethod
+    def load(cls, path: str) -> "Graph":
+        import os
+        weights = None
+        if os.path.exists(path + ".npz"):
+            weights = dict(np.load(path + ".npz"))
+        with open(path) as f:
+            return cls.from_json(f.read(), weights)

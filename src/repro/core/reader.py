@@ -1,0 +1,89 @@
+"""The Reader half of the ONNXParser: builds the IR from model descriptions.
+
+Sources supported:
+  * ONNX-shaped JSON (+ npz weights)              — ``read_json`` / ``read_file``
+  * the paper's CNN (repro.models.cnn params)     — ``cnn_to_ir``
+  * a generic MLP description                     — ``mlp_to_ir``
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.mnist_cnn import CNNConfig
+from repro.core.ir import Graph, Node, TensorInfo
+
+
+def read_json(text: str, weights: Optional[Dict[str, np.ndarray]] = None) -> Graph:
+    return Graph.from_json(text, weights)
+
+
+def read_file(path: str) -> Graph:
+    return Graph.load(path)
+
+
+def cnn_to_ir(cfg: CNNConfig, params: Dict[str, np.ndarray],
+              batch: int = 1) -> Graph:
+    """The paper's 2-conv-block + FC MNIST classifier as an IR graph.
+
+    Layout is NHWC; Conv weights HWIO (converted by the writers as needed).
+    """
+    h, w = cfg.image_hw
+    nodes = []
+    inits: Dict[str, np.ndarray] = {}
+    x = "input"
+    cin = cfg.in_channels
+    for i, cout in enumerate(cfg.conv_channels):
+        wname, bname = f"conv{i}/w", f"conv{i}/b"
+        inits[wname] = np.asarray(params[wname])
+        inits[bname] = np.asarray(params[bname])
+        nodes.append(Node("Conv", f"conv{i}", [x, wname, bname], [f"conv{i}_out"],
+                          {"kernel_shape": [cfg.kernel_size] * 2, "pads": "SAME",
+                           "strides": [1, 1]}))
+        nodes.append(Node("MaxPool", f"pool{i}", [f"conv{i}_out"], [f"pool{i}_out"],
+                          {"kernel_shape": [cfg.pool] * 2, "strides": [cfg.pool] * 2}))
+        for stat in ("scale", "bias", "mean", "var"):
+            inits[f"bn{i}/{stat}"] = np.asarray(params[f"bn{i}/{stat}"])
+        nodes.append(Node("BatchNormalization", f"bn{i}",
+                          [f"pool{i}_out", f"bn{i}/scale", f"bn{i}/bias",
+                           f"bn{i}/mean", f"bn{i}/var"], [f"bn{i}_out"],
+                          {"epsilon": 1e-5}))
+        nodes.append(Node("Relu", f"relu{i}", [f"bn{i}_out"], [f"relu{i}_out"]))
+        x = f"relu{i}_out"
+        cin = cout
+        h, w = h // cfg.pool, w // cfg.pool
+    nodes.append(Node("Flatten", "flatten", [x], ["flat"]))
+    inits["fc/w"] = np.asarray(params["fc/w"])
+    inits["fc/b"] = np.asarray(params["fc/b"])
+    nodes.append(Node("Gemm", "fc", ["flat", "fc/w", "fc/b"], ["logits"]))
+    g = Graph(
+        name="mnist-cnn",
+        nodes=nodes,
+        inputs=[TensorInfo("input", (batch, cfg.image_hw[0], cfg.image_hw[1],
+                                     cfg.in_channels))],
+        outputs=["logits"],
+        initializers=inits,
+    )
+    g.validate()
+    return g
+
+
+def mlp_to_ir(layer_sizes, params: Dict[str, np.ndarray], batch: int = 1,
+              name: str = "mlp") -> Graph:
+    """Fully-connected stack (the HLS4ML comparison topology, Table I)."""
+    nodes = []
+    inits: Dict[str, np.ndarray] = {}
+    x = "input"
+    for i in range(len(layer_sizes) - 1):
+        wn, bn = f"fc{i}/w", f"fc{i}/b"
+        inits[wn], inits[bn] = np.asarray(params[wn]), np.asarray(params[bn])
+        out = f"fc{i}_out" if i < len(layer_sizes) - 2 else "logits"
+        nodes.append(Node("Gemm", f"fc{i}", [x, wn, bn], [out]))
+        if i < len(layer_sizes) - 2:
+            nodes.append(Node("Relu", f"relu{i}", [out], [f"relu{i}_out"]))
+            x = f"relu{i}_out"
+    g = Graph(name, nodes, [TensorInfo("input", (batch, layer_sizes[0]))],
+              ["logits"], inits)
+    g.validate()
+    return g

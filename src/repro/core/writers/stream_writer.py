@@ -1,0 +1,61 @@
+"""Writer 2: IR -> streaming actor pipeline (the HLS-Writer analogue).
+
+Retargets Conv nodes onto the Pallas line-buffer kernel (Fig. 2 template:
+Line Buffer + Conv actor + VMEM-resident Weight/Bias actors) and emits an
+XDF-style topology description — the artifact the Multi-Dataflow Composer
+consumes (``topology()``; compare the paper's XDF/CAL files).
+"""
+from __future__ import annotations
+
+import json
+from typing import Callable, Dict
+
+from repro.core.ir import Graph, Node
+from repro.core.writers.jax_writer import JaxWriter, OP_IMPLS
+
+
+def _op_conv_stream(node: Node, env):
+    from repro.kernels.conv2d_stream.ops import conv2d_stream
+    x, w, b = (env[i] for i in node.inputs)
+    return conv2d_stream(x, w, b)
+
+
+class StreamWriter(JaxWriter):
+    target = "stream"
+
+    def op_impl(self, op: str) -> Callable:
+        if op == "Conv":
+            return _op_conv_stream
+        return OP_IMPLS[op]
+
+    # ---- dataflow topology (XDF analogue) ---------------------------------
+    def topology(self) -> Dict:
+        """Actors + FIFO connections of the streaming accelerator."""
+        actors = []
+        for n in self.graph.topo_order():
+            actor = {"name": n.name, "class": n.op, "target": (
+                "pallas/conv2d_stream" if n.op == "Conv" else "jax")}
+            if n.op == "Conv":
+                w = self.graph.initializers[n.inputs[1]]
+                actor["sub_actors"] = ["LineBuffer", "ConvActor", "WeightActor",
+                                       "BiasActor"]
+                actor["weight_shape"] = list(w.shape)
+            actors.append(actor)
+        conns = []
+        producers = {}
+        for t in self.graph.inputs:
+            producers[t.name] = "input"
+        for n in self.graph.topo_order():
+            for i in n.inputs:
+                if i in producers:
+                    conns.append({"src": producers[i], "dst": n.name,
+                                  "fifo": i,
+                                  "datatype": f"D{self.dt.act_bits}-W{self.dt.weight_bits}"})
+            for o in n.outputs:
+                producers[o] = n.name
+        return {"network": self.graph.name, "actors": actors,
+                "connections": conns}
+
+    def save_topology(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.topology(), f, indent=1)

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: streaming line-buffer convolution (paper Fig. 2).
+
+TPU adaptation of the HLS CONV-actor template (DESIGN.md §2):
+
+* *Line Buffer actor*  -> the padded input rows of one image live in VMEM and
+  are re-read kh*kw times (data reuse without re-touching HBM);
+* *Conv actor*         -> each (dy, dx) tap is an MXU matmul
+  ``(H*W, Cin) @ (Cin, Cout)`` accumulated in f32;
+* *Weight/Bias actors* -> the full filter bank + bias stay VMEM-resident
+  across the whole grid (BlockSpec index_map pins them).
+
+Grid = (B,) — one image per step, streamed HBM->VMEM once.  Suited to
+edge-CNN images (the paper's scope); dims need no 128 alignment because the
+matmul M dim is H*W (lane packing handled by Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int):
+    """x: (1, H+kh-1, W+kw-1, Cin) padded; w: (kh, kw, Cin, Cout); b: (1, Cout);
+    o: (1, H, W, Cout)."""
+    _, Hp, Wp, Cin = x_ref.shape
+    H = Hp - (kh - 1)
+    W = Wp - (kw - 1)
+    Cout = o_ref.shape[-1]
+    x = x_ref[0]                                  # VMEM-resident line buffer
+    acc = jnp.zeros((H * W, Cout), jnp.float32)
+    for dy in range(kh):                          # kh*kw MXU taps, VMEM reuse
+        for dx in range(kw):
+            patch = jax.lax.slice(x, (dy, dx, 0), (dy + H, dx + W, Cin))
+            acc += jax.lax.dot(
+                patch.reshape(H * W, Cin).astype(jnp.float32),
+                w_ref[dy, dx].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    acc += b_ref[0].astype(jnp.float32)
+    o_ref[0] = acc.reshape(H, W, Cout).astype(o_ref.dtype)
+
+
+def build_call(B: int, H: int, W: int, Cin: int, Cout: int, kh: int, kw: int,
+               out_dtype=jnp.float32, interpret: bool = False):
+    Hp, Wp = H + kh - 1, W + kw - 1
+    return pl.pallas_call(
+        functools.partial(conv_kernel, kh=kh, kw=kw),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, Cin), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, Cin, Cout), lambda b: (0, 0, 0, 0)),
+            pl.BlockSpec((1, Cout), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, W, Cout), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, W, Cout), out_dtype),
+        interpret=interpret,
+    )

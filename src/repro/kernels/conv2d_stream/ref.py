@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the streaming line-buffer convolution."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, b, stride: int = 1):
+    """x: (B, H, W, Cin) float; w: (kh, kw, Cin, Cout); b: (Cout,).
+
+    SAME padding, NHWC/HWIO — matches repro.models.cnn.conv2d."""
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return (y + b.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: dequant-fused quantized matmul.
+
+Weights live in HBM as int8 master codes (one copy serves every working point,
+DESIGN.md §2 MDC row); each (bk, bn) tile is streamed into VMEM, truncated to
+the active ``bits`` view, dequantized with the per-channel scale and fed to the
+MXU against a (bm, bk) activation tile.  f32 accumulation in a VMEM scratch
+tile across the k grid dim (TPU grid is sequential => scratch carries).
+
+Block shapes are MXU-aligned (multiples of 128 on M/N; 128 lanes on K).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _truncate(codes_f32, bits: int):
+    """Nested ``bits``-bit view of int8 codes (matches quant.ptq.derive_view)."""
+    if bits >= 8:
+        return codes_f32
+    step = float(1 << (8 - bits))
+    q = jnp.clip(jnp.round(codes_f32 / step), -(2 ** (bits - 1)),
+                 2 ** (bits - 1) - 1)
+    return q * step
+
+
+def qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int, nk: int):
+    """Grid (m, n, k). x: (bm, bk) bf16; w: (bk, bn) int8; s: (1, bn) f32."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _truncate(w_ref[...].astype(jnp.float32), bits)
+    acc_ref[...] += jax.lax.dot(
+        x_ref[...].astype(jnp.float32), w,
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * s_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+
+def qmatmul_int8_kernel(x_ref, xs_ref, w_ref, s_ref, o_ref, acc_ref, *,
+                        bits: int, nk: int):
+    """Integer-domain path: x int8 codes (bm, bk) + per-row scale (bm, 1);
+    int32 accumulation (MXU int8 rate)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.int32)
+    if bits < 8:
+        # same round-half-even rule as quant.ptq.derive_view (bit-exact)
+        w = _truncate(w.astype(jnp.float32), bits).astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot(x_ref[...].astype(jnp.int32), w,
+                                preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * xs_ref[...].astype(jnp.float32)
+                      * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def build_call(M: int, K: int, N: int, *, bits: int, int8_act: bool,
+               bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+               out_dtype=jnp.bfloat16, interpret: bool = False):
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, K, N, bm, bn, bk)
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+
+    if int8_act:
+        kern = functools.partial(qmatmul_int8_kernel, bits=bits, nk=nk)
+        in_specs = [
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bm, 1), lambda m, n, k: (m, 0)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
+        ]
+        acc_dtype = jnp.int32
+    else:
+        kern = functools.partial(qmatmul_kernel, bits=bits, nk=nk)
+        in_specs = [
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
+        ]
+        acc_dtype = jnp.float32
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        interpret=interpret,
+    )

@@ -1,0 +1,65 @@
+"""jit'd public wrapper for the quantized matmul kernel.
+
+``qmatmul(x, codes, scale, bits=…)`` handles arbitrary leading batch dims,
+pads M/K/N up to MXU-aligned tiles, and falls back to the jnp oracle for
+shapes too small to tile (CPU smoke paths).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qmatmul.kernel import build_call, DEFAULT_BM, DEFAULT_BN, DEFAULT_BK
+from repro.kernels.qmatmul.ref import qmatmul_ref
+
+_MIN_TILE = 128
+
+
+def _pad_to(x, m, axis):
+    r = (-x.shape[axis]) % m
+    if r == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, r)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret", "use_kernel",
+                                             "bm", "bn", "bk"))
+def qmatmul(x, codes, scale, *, bits: int = 8, interpret: bool = True,
+            use_kernel: bool = True, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+            bk: int = DEFAULT_BK):
+    """x: (..., K) float; codes: (K, N) int8; scale: (N,) f32 -> (..., N)."""
+    lead = x.shape[:-1]
+    K, N = codes.shape
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    if not use_kernel or min(M, K, N) < 8:
+        y = qmatmul_ref(x2, codes, scale, bits, out_dtype=x.dtype)
+        return y.reshape(*lead, N)
+    xp = _pad_to(_pad_to(x2, _MIN_TILE, 0), _MIN_TILE, 1)
+    cp = _pad_to(_pad_to(codes, _MIN_TILE, 0), _MIN_TILE, 1)
+    sp = _pad_to(scale.reshape(1, -1).astype(jnp.float32), _MIN_TILE, 1)
+    call = build_call(xp.shape[0], xp.shape[1], cp.shape[1], bits=bits,
+                      int8_act=False, bm=min(bm, xp.shape[0]),
+                      bn=min(bn, cp.shape[1]), bk=min(bk, xp.shape[1]),
+                      out_dtype=x.dtype, interpret=interpret)
+    y = call(xp.astype(jnp.bfloat16), cp, sp)[:M, :N]
+    return y.reshape(*lead, N)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def qmatmul_int8_act(x_codes, x_scale, codes, scale, *, bits: int = 8,
+                     interpret: bool = True, out_dtype=jnp.bfloat16):
+    """Full-integer path: x_codes (M, K) int8 + per-row scale (M,)."""
+    M, K = x_codes.shape
+    N = codes.shape[1]
+    xp = _pad_to(_pad_to(x_codes, _MIN_TILE, 0), _MIN_TILE, 1)
+    xsp = _pad_to(x_scale.reshape(-1, 1).astype(jnp.float32), _MIN_TILE, 0)
+    cp = _pad_to(_pad_to(codes, _MIN_TILE, 0), _MIN_TILE, 1)
+    sp = _pad_to(scale.reshape(1, -1).astype(jnp.float32), _MIN_TILE, 1)
+    call = build_call(xp.shape[0], xp.shape[1], cp.shape[1], bits=bits,
+                      int8_act=True, out_dtype=out_dtype, interpret=interpret)
+    return call(xp, xsp, cp, sp)[:M, :N]

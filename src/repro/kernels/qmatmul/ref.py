@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the dequant-fused quantized matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.ptq import derive_view
+
+
+def qmatmul_ref(x, codes, scale, bits: int = 8, out_dtype=jnp.bfloat16):
+    """x: (M, K) float; codes: (K, N) int8 master; scale: (N,) or (1, N) f32.
+
+    Dequantizes the ``bits``-bit derived view of the master codes and matmuls.
+    """
+    w = derive_view(codes, bits).astype(jnp.float32) * scale.reshape(1, -1)
+    y = jnp.dot(x.astype(jnp.float32), w)
+    return y.astype(out_dtype)
+
+
+def qmatmul_int8_act_ref(x_codes, x_scale, codes, scale, bits: int = 8,
+                         out_dtype=jnp.bfloat16):
+    """Integer-domain path: x_codes (M, K) int8, per-row scale (M,) or scalar.
+
+    Accumulates in int32 (the MXU int8 path) then rescales."""
+    w = derive_view(codes, bits)
+    acc = jnp.dot(x_codes.astype(jnp.int32), w.astype(jnp.int32))
+    y = acc.astype(jnp.float32) * x_scale.reshape(-1, 1) * scale.reshape(1, -1)
+    return y.astype(out_dtype)

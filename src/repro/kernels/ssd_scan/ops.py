@@ -1,0 +1,34 @@
+"""jit'd wrapper matching the ``repro.models.ssm.ssd_chunked`` signature."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import build_call
+from repro.models.ssm import ssd_chunked
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_kernel(x, dt, A, Bm, C, D, chunk: int, init_state=None,
+                       interpret: bool = True):
+    """Same contract as ``ssd_chunked``: x (B,S,H,P), dt (B,S,H) f32, A (H,),
+    Bm/C (B,S,G,N), D (H,) -> (y (B,S,H,P), state (B,H,P,N))."""
+    if init_state is not None:
+        # kernel carries state from zero; warm starts go through the oracle
+        return ssd_chunked(x, dt, A, Bm, C, D, chunk, init_state)
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    xk = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtk = dt.transpose(0, 2, 1).reshape(B * H, S).astype(jnp.float32)
+    Bk = jnp.repeat(Bm, rep, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    Ck = jnp.repeat(C, rep, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    Ak = jnp.tile(A.reshape(1, H), (B, 1)).reshape(B * H, 1).astype(jnp.float32)
+    Dk = jnp.tile(D.reshape(1, H), (B, 1)).reshape(B * H, 1).astype(jnp.float32)
+    call = build_call(B * H, S, P, N, chunk, dtype=x.dtype, interpret=interpret)
+    y, fin = call(xk, dtk, Bk.astype(x.dtype), Ck.astype(x.dtype), Ak, Dk)
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    state = fin.reshape(B, H, N, P).transpose(0, 1, 3, 2)
+    return y, state

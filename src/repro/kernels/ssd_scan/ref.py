@@ -1,0 +1,2 @@
+"""Oracle for the fused SSD kernel = the models' chunked implementation."""
+from repro.models.ssm import ssd_chunked as ssd_ref  # noqa: F401

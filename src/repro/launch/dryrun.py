@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (brief §MULTI-POD DRY-RUN).
+
+Lowers + compiles the production step for every (arch x shape x mesh) cell
+with ShapeDtypeStruct inputs (no allocation), records memory/cost analysis and
+the collective schedule, and derives the roofline terms.  JSON artifacts land
+in artifacts/dryrun/.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig, shapes_for
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import RooflineReport, model_flops_for, parse_collectives
+from repro.optim.adamw import OptConfig
+from repro.runtime import model_api
+from repro.runtime.train import make_train_step, state_shardings
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def _lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                remat: bool = True, grad_compress: bool = False,
+                extra: Optional[Dict] = None, unroll: bool = False):
+    """Build + lower the production step for one cell. Returns (lowered, meta)."""
+    tp_total = mesh.shape["model"]
+    extra = extra or {}
+    # attention layout flags are inference wins (prefill 1.5-26x); the bwd
+    # pass prefers GSPMD's own layouts, so train cells keep baseline attention
+    # (measured: mixtral/danube/whisper train regress with forced layouts)
+    import contextlib
+    import dataclasses as _dc
+    from repro import perf
+
+    @contextlib.contextmanager
+    def _train_flags():
+        saved = _dc.replace(perf.FLAGS)
+        if shape.kind == "train":
+            # banded-SWA/grouped-GQA/bf16-score layouts regress the bwd pass
+            # (measured: mixtral/danube train); head constraints self-gate
+            perf.FLAGS.gqa_grouped = False
+            perf.FLAGS.swa_banded = False
+            perf.FLAGS.attn_bf16_scores = False
+        try:
+            yield
+        finally:
+            perf.FLAGS.__dict__.update(saved.__dict__)
+
+    with mesh, _train_flags():
+        if shape.kind == "train":
+            state = S.abstract_train_state(cfg, shape, tp_total, grad_compress)
+            batch = S.input_specs(cfg, shape)
+            step = make_train_step(cfg, OptConfig(), mesh=mesh,
+                                   tp_total=tp_total, remat=remat,
+                                   grad_compress=grad_compress,
+                                   microbatches=extra.get("microbatches", 1),
+                                   unroll=unroll)
+            st_sh = state_shardings(cfg, state, mesh)
+            b_sh = S.batch_sharding(batch, mesh)
+            fn = jax.jit(step, in_shardings=(st_sh, b_sh),
+                         out_shardings=(st_sh, None), donate_argnums=(0,))
+            return fn.lower(state, batch)
+        params = S.abstract_inference_params(cfg, shape, tp_total)
+        qbits = int(extra.get("quant_bits", 0) or 0)
+        if qbits:
+            # the paper's technique at pod scale: weight-only quantized serving.
+            # codes are int8 (W8) / int4 (W4) arrays; dequant happens in-graph
+            # and fuses into the matmul reads (memory roofline term drops).
+            from repro.quant.ptq import is_quantizable
+            store = jnp.int4 if qbits <= 4 else jnp.int8
+            qparams, q_sh = {}, {}
+            base_sh = S.param_sharding_for(cfg, params, mesh)
+            for k, v in params.items():
+                proto = jnp.zeros((), v.dtype)
+                if is_quantizable(k, jax.ShapeDtypeStruct(v.shape, v.dtype)) \
+                        and not k.startswith(("embed/", "lm_head/")):
+                    qparams[k] = jax.ShapeDtypeStruct(v.shape, store)
+                    qparams[k + "@scale"] = jax.ShapeDtypeStruct(
+                        v.shape[:-2] + (1, v.shape[-1]), jnp.float32)
+                    q_sh[k] = base_sh[k]
+                    q_sh[k + "@scale"] = S.param_sharding_for(
+                        cfg, {k: qparams[k + "@scale"]}, mesh)[k]
+                else:
+                    qparams[k] = v
+                    q_sh[k] = base_sh[k]
+
+            def dequant_params(qp):
+                out = {}
+                for k, v in qp.items():
+                    if k.endswith("@scale"):
+                        continue
+                    if k + "@scale" in qp:
+                        out[k] = (v.astype(jnp.float32) * qp[k + "@scale"]
+                                  ).astype(jnp.dtype(cfg.dtype))
+                    else:
+                        out[k] = v
+                return out
+        else:
+            qparams, q_sh = params, S.param_sharding_for(cfg, params, mesh)
+            dequant_params = lambda p: p
+        if shape.kind == "prefill":
+            batch = S.input_specs(cfg, shape)
+            b_sh = S.batch_sharding(batch, mesh)
+
+            def prefill(p, b):
+                logits, _ = model_api.forward_logits(dequant_params(p), b, cfg,
+                                                     mesh=mesh,
+                                                     tp_total=tp_total,
+                                                     unroll=unroll)
+                return logits
+
+            fn = jax.jit(prefill, in_shardings=(q_sh, b_sh))
+            return fn.lower(qparams, batch)
+        # decode
+        kv_dtype = extra.get("kv_dtype")
+        state = S.abstract_decode_state(cfg, shape, kv_dtype=kv_dtype)
+        st_sh = S.decode_state_sharding(cfg, state, mesh)
+        toks = S.input_specs(cfg, shape)["tokens"]
+        t_sh = S.batch_sharding({"tokens": toks}, mesh)["tokens"]
+
+        def decode(p, t, st):
+            return model_api.decode_step(dequant_params(p), t, st, cfg,
+                                         mesh=mesh, tp_total=tp_total,
+                                         unroll=unroll)
+
+        fn = jax.jit(decode, in_shardings=(q_sh, t_sh, st_sh),
+                     out_shardings=(None, st_sh), donate_argnums=(2,))
+        return fn.lower(qparams, toks, state)
+
+
+def _layer_points(cfg: ModelConfig):
+    """(variant cfg, linear weight) pairs whose weighted sum of per-program
+    costs equals the full model — XLA's cost_analysis counts a scan body
+    ONCE, so per-layer costs are recovered by two-point extrapolation:
+    f(L) = f(1) + (L-1)(f(2)-f(1)).  Whisper varies enc and dec stacks."""
+    import dataclasses
+    L = cfg.n_layers
+    if cfg.enc_layers:
+        E = cfg.enc_layers
+        return [
+            (dataclasses.replace(cfg, n_layers=1, enc_layers=1),
+             1.0 - (E - 1) - (L - 1)),
+            (dataclasses.replace(cfg, n_layers=1, enc_layers=2), float(E - 1)),
+            (dataclasses.replace(cfg, n_layers=2, enc_layers=1), float(L - 1)),
+        ]
+    return [
+        (dataclasses.replace(cfg, n_layers=1), 2.0 - L),
+        (dataclasses.replace(cfg, n_layers=2), float(L - 1)),
+    ]
+
+
+def _analyze_extrapolated(cfg: ModelConfig, shape: ShapeConfig, mesh, **kw):
+    """Extrapolated (flops, bytes, CollectiveStats) for the full depth."""
+    from repro.launch.roofline import CollectiveStats
+    from collections import Counter
+    flops = byts = wire = raw = 0.0
+    counts, by_op = Counter(), Counter()
+    for sub_cfg, w in _layer_points(cfg):
+        lowered = _lower_cell(sub_cfg, shape, mesh, unroll=True, **kw)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        st = parse_collectives(compiled.as_text())
+        flops += w * float(ca.get("flops", 0.0))
+        byts += w * float(ca.get("bytes accessed", 0.0))
+        wire += w * st.wire_bytes
+        raw += w * st.raw_bytes
+        for k, v in st.counts.items():
+            counts[k] += round(w * v)
+        for k, v in st.bytes_by_op.items():
+            by_op[k] += w * v
+    coll = CollectiveStats(counts=dict(counts), bytes_by_op=dict(by_op),
+                           wire_bytes=wire, raw_bytes=raw)
+    return flops, byts, coll
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             remat: bool = True, grad_compress: bool = False,
+             extra: Optional[Dict] = None, out_dir: str = ARTIFACT_DIR,
+             tag: str = "", verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+    lowered = _lower_cell(cfg, shape, mesh, remat=remat,
+                          grad_compress=grad_compress, extra=extra)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    try:
+        ma = compiled.memory_analysis()
+        mem = {"argument_bytes": int(ma.argument_size_in_bytes),
+               "output_bytes": int(ma.output_size_in_bytes),
+               "temp_bytes": int(ma.temp_size_in_bytes),
+               "alias_bytes": int(ma.alias_size_in_bytes)}
+    except Exception:
+        mem = {}
+    # depth-extrapolated roofline terms (scan bodies count once in XLA's
+    # cost model; see _layer_points)
+    flops, byts, coll = _analyze_extrapolated(
+        cfg, shape, mesh, remat=remat, grad_compress=grad_compress, extra=extra)
+    n_active = cfg.active_param_count()
+    rep = RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective=coll,
+        model_flops=model_flops_for(cfg, shape, n_active))
+    result = {**rep.to_dict(), "memory_analysis": mem,
+              "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+              "kind": shape.kind, "remat": remat,
+              "grad_compress": grad_compress, "extra": extra or {},
+              "n_params": cfg.param_count(), "n_active": n_active,
+              "status": "ok"}
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    fname = f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(result, f, indent=1)
+    if verbose:
+        print(f"[ok] {arch} x {shape_name} x {mesh_name}{suffix}: "
+              f"compile={t_compile:.0f}s bound={result['bound']} "
+              f"compute={result['compute_s']:.2e}s memory={result['memory_s']:.2e}s "
+              f"collective={result['collective_s']:.2e}s "
+              f"useful={result['useful_flops_ratio']:.2f} mfu={result['mfu']:.3f}",
+              flush=True)
+        if mem:
+            print(f"     mem/device: args={mem['argument_bytes']/2**30:.2f}GiB "
+                  f"temps={mem['temp_bytes']/2**30:.2f}GiB", flush=True)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="disable repro.perf optimizations (paper-faithful run)")
+    ap.add_argument("--quant-bits", type=int, default=0,
+                    help="weight-quantized serving (8/4): decode/prefill cells")
+    ap.add_argument("--kv-dtype", default=None,
+                    help="KV-cache dtype for decode cells (e.g. float8_e4m3fn)")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+    if args.baseline:
+        from repro import perf
+        perf.set_baseline()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in shapes_for(get_config(arch)):
+                cells.append((arch, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            suffix = f"_{args.tag}" if args.tag else ""
+            path = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+            if not args.force and os.path.exists(path):
+                print(f"[skip] {arch} x {shape} x {mesh_name}{suffix} (cached)",
+                      flush=True)
+                continue
+            extra = {}
+            if args.microbatches > 1:
+                extra["microbatches"] = args.microbatches
+            if args.quant_bits:
+                extra["quant_bits"] = args.quant_bits
+            if args.kv_dtype:
+                extra["kv_dtype"] = args.kv_dtype
+            try:
+                run_cell(arch, shape, multi_pod=mp, remat=not args.no_remat,
+                         grad_compress=args.grad_compress,
+                         extra=extra or None,
+                         out_dir=args.out, tag=args.tag)
+            except Exception as e:
+                failures.append((arch, shape, mesh_name, repr(e)))
+                print(f"[FAIL] {arch} x {shape} x {mesh_name}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f[:3], f[3][:200])
+        raise SystemExit(1)
+    print("\nall requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

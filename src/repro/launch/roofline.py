@@ -1,0 +1,171 @@
+"""Roofline-term derivation from compiled dry-run artifacts (brief §ROOFLINE).
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16 (394 TOP/s int8) per
+chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+``cost_analysis()`` flops / bytes are for the *per-device* SPMD program
+(verified empirically), so terms need no chip division.  Collective bytes are
+parsed from the compiled HLO text: per op, wire bytes on the slowest link of a
+ring schedule (2(n-1)/n for all-reduce, (n-1)/n for gather/scatter/all-to-all,
+1x for collective-permute).
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+    wire_bytes: float = 0.0          # per-device, slowest-link, ring-adjusted
+    raw_bytes: float = 0.0           # sum of operand/result sizes
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats(counts=Counter(), bytes_by_op=Counter())
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        size = _shape_bytes(type_str)
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * size
+        elif op == "all-gather":
+            wire = (n - 1) / n * size          # result is the gathered shape
+        elif op == "reduce-scatter":
+            wire = (n - 1) * size              # result is the scattered shape
+        elif op == "all-to-all":
+            wire = (n - 1) / n * size
+        else:  # collective-permute
+            wire = size
+        st.counts[op] += 1
+        st.bytes_by_op[op] += wire
+        st.wire_bytes += wire
+        st.raw_bytes += size
+    return st
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective: CollectiveStats
+    model_flops: float               # 6ND / 2ND useful-model flops (global)
+    peak_flops: float = PEAK_FLOPS_BF16
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective.wire_bytes / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time = max of the three overlappable terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips * HLO flops): remat/dispatch/pad waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-flops utilization at the roofline step time."""
+        denom = self.step_s * self.chips * self.peak_flops
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_wire_bytes": self.collective.wire_bytes,
+            "collective_counts": dict(self.collective.counts),
+            "collective_bytes_by_op": dict(self.collective.bytes_by_op),
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bound": self.bound,
+            "step_s": self.step_s, "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu": self.mfu,
+        }
+
+
+def model_flops_for(cfg, shape, n_params_active: int) -> float:
+    """Useful model FLOPs per executed step (global)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_params_active * shape.global_batch

@@ -1,0 +1,127 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns the abstract model inputs (no device
+allocation); ``cell_specs`` packages everything jit.lower needs per cell kind:
+
+  train   -> (TrainState, batch{tokens, labels[, frames|patches]})
+  prefill -> (params, batch{tokens[, frames|patches]})
+  decode  -> (params, tokens(B, 1), DecodeState)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+from repro.models.params import abstract_params
+from repro.optim.adamw import OptState
+from repro.runtime.train import TrainState, state_shardings
+from repro.sharding import batch_axes, dp_size, param_sharding
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for one cell (tokens/labels + modality stubs)."""
+    B = shape.global_batch
+    S = 1 if shape.is_decode else shape.seq_len
+    specs = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "audio":
+        specs["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.n_patches and not shape.is_decode:
+        specs["patches"] = _sds((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def batch_sharding(specs: Dict, mesh: Mesh) -> Dict:
+    dp = batch_axes(mesh)
+    n = dp_size(mesh)
+    out = {}
+    for k, v in specs.items():
+        if v.shape and v.shape[0] % n == 0:
+            out[k] = NamedSharding(mesh, P(dp, *([None] * (len(v.shape) - 1))))
+        else:
+            out[k] = NamedSharding(mesh, P())  # tiny batch (long_500k): replicate
+    return out
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: ShapeConfig,
+                          kv_dtype: Optional[str] = None):
+    B = shape.global_batch
+    dt = jnp.dtype(kv_dtype) if kv_dtype else jnp.bfloat16
+    if cfg.family == "audio":
+        return encdec.abstract_decode_state(cfg, B, shape.seq_len, dt)
+    return jax.eval_shape(
+        lambda: transformer.init_decode_state(cfg, B, shape.seq_len, dt))
+
+
+def decode_state_sharding(cfg: ModelConfig, state, mesh: Mesh):
+    """Flat kv dims over ``model``; batch over dp when divisible, else the
+    cache *sequence* dim over the data axes (long_500k, global_batch=1)."""
+    dp = batch_axes(mesh)
+    ndp = dp_size(mesh)
+    tp = mesh.shape["model"]
+
+    def spec(x, seq_dim: Optional[int] = None, feat_dim: Optional[int] = None):
+        if x is None:
+            return None
+        if len(x.shape) == 0:
+            return NamedSharding(mesh, P())
+        parts = [None] * len(x.shape)
+        if x.shape[1] % ndp == 0:
+            parts[1] = dp
+        elif seq_dim is not None and x.shape[seq_dim] % ndp == 0:
+            parts[seq_dim] = dp
+        if feat_dim is not None and x.shape[feat_dim] % tp == 0:
+            parts[feat_dim] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    if isinstance(state, encdec.EncDecDecodeState):
+        return encdec.EncDecDecodeState(
+            cache_k=spec(state.cache_k, seq_dim=2, feat_dim=3),
+            cache_v=spec(state.cache_v, seq_dim=2, feat_dim=3),
+            cross_k=spec(state.cross_k),
+            cross_v=spec(state.cross_v),
+            index=NamedSharding(mesh, P()))
+    return transformer.DecodeState(
+        cache_k=spec(state.cache_k, seq_dim=2, feat_dim=3),
+        cache_v=spec(state.cache_v, seq_dim=2, feat_dim=3),
+        ssm_ssd=spec(state.ssm_ssd, feat_dim=2),
+        ssm_conv=spec(state.ssm_conv),
+        index=NamedSharding(mesh, P()))
+
+
+def abstract_train_state(cfg: ModelConfig, shape: ShapeConfig, tp_total: int,
+                         grad_compress: bool = False) -> TrainState:
+    params = abstract_params(cfg, max_seq=shape.seq_len, tp_total=tp_total)
+
+    def f32_like(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+
+    err = None
+    if grad_compress:
+        err = {k: jax.ShapeDtypeStruct(v.shape, jnp.bfloat16)
+               for k, v in params.items()}
+    return TrainState(
+        params=params,
+        opt=OptState(mu={k: f32_like(v) for k, v in params.items()},
+                     nu={k: f32_like(v) for k, v in params.items()},
+                     count=jax.ShapeDtypeStruct((), jnp.int32)),
+        err_fb=err)
+
+
+def abstract_inference_params(cfg: ModelConfig, shape: ShapeConfig,
+                              tp_total: int):
+    return abstract_params(cfg, max_seq=shape.seq_len, tp_total=tp_total)
+
+
+def param_sharding_for(cfg: ModelConfig, params, mesh: Mesh):
+    return param_sharding(params, mesh)

@@ -1,0 +1,244 @@
+"""Attention: GQA with RoPE, sliding-window support, chunked prefill, KV-cache decode.
+
+Prefill/train attention is computed in query chunks (``lax.scan``) so the
+(B, H, S, S) score tensor is never materialized — the XLA-level analogue of a
+flash schedule; per-row softmax stays exact because each chunk row sees all keys.
+
+Perf knobs (repro.perf.FLAGS, see EXPERIMENTS.md §Perf):
+  * head-sharded layout constraints (stops GSPMD from splitting the d_head
+    contraction, which all-reduces full score tensors across the mesh);
+  * grouped GQA (scores computed per kv-head group — the repeated kv tensor is
+    never materialized, removing the G× KV read amplification);
+  * banded SWA prefill (only the in-window key band is computed per q chunk).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_rope, rope_angles
+from repro.perf import FLAGS
+
+Q_CHUNK = 1024  # query-block size for chunked attention
+
+
+class LayerAttnParams(NamedTuple):
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    bq: Optional[jax.Array] = None
+    bk: Optional[jax.Array] = None
+    bv: Optional[jax.Array] = None
+
+
+def _dp(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _constrain_heads(x, mesh, batch_sharded: bool = True):
+    """x: (B, S, H, Dh) -> head-sharded over 'model' (uneven dims pad)."""
+    dp = _dp(mesh) if batch_sharded and x.shape[0] % 2 == 0 else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, None, "model", None)))
+
+
+def _proj_qkv(x, p: LayerAttnParams, cfg: ModelConfig, mesh=None):
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, p.wq)
+    k = jnp.einsum("bsd,de->bse", x, p.wk)
+    v = jnp.einsum("bsd,de->bse", x, p.wv)
+    if p.bq is not None:
+        q, k, v = q + p.bq, k + p.bk, v + p.bv
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    # Pin head-sharded layouts only in the pathological case: q heads neither
+    # divide nor fit under the model axis, where GSPMD otherwise splits the
+    # d_head *contraction* and all-reduces full score tensors (measured:
+    # 24 GiB/layer on granite prefill).  Divisible counts propagate fine;
+    # H < tp everywhere (whisper) pads more slots than heads and regresses.
+    # The per-layer decision follows the q-head count and applies to k/v too
+    # (an unconstrained kv side re-introduces the bad contraction split).
+    if mesh is not None and FLAGS.attn_head_constraint:
+        tp = mesh.shape["model"]
+        if cfg.n_heads % tp != 0 and cfg.n_heads > tp:
+            q = _constrain_heads(q, mesh)
+            k = _constrain_heads(k, mesh)
+            v = _constrain_heads(v, mesh)
+    return q, k, v
+
+
+def _expand_kv(k, n_heads: int):
+    """(B, S, Hkv, Dh) -> (B, S, H, Dh) by group repetition."""
+    rep = n_heads // k.shape[2]
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _mask(qpos, kpos, window: Optional[int], causal: bool):
+    """qpos: (Q,), kpos: (K,) -> bool (Q, K) of *allowed* links."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def _sdpa_chunk(q, k, v, qpos, kpos, window, causal, scale, grouped: bool):
+    """q: (B, Qc, H, Dh); k/v: (B, S, Hkv, Dh) -> (B, Qc, H, Dh).
+
+    grouped=True computes scores per kv group without repeating k/v."""
+    B, Qc, H, Dh = q.shape
+    Hkv = k.shape[2]
+    m = _mask(qpos, kpos, window, causal)
+    sdt = jnp.bfloat16 if (FLAGS.attn_bf16_scores
+                           and q.dtype == jnp.bfloat16) else jnp.float32
+    neg = jnp.finfo(sdt).min
+    if grouped and Hkv != H:
+        G = H // Hkv
+        qg = q.reshape(B, Qc, Hkv, G, Dh)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                       preferred_element_type=jnp.float32
+                       ).astype(sdt) * jnp.asarray(scale, sdt)
+        s = jnp.where(m[None, None, None], s, neg)
+        prob = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", prob, v)
+        return o.reshape(B, Qc, H, Dh)
+    kx = _expand_kv(k, H)
+    vx = _expand_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kx,
+                   preferred_element_type=jnp.float32
+                   ).astype(sdt) * jnp.asarray(scale, sdt)
+    s = jnp.where(m[None, None], s, neg)
+    prob = jax.nn.softmax(s, axis=-1).astype(vx.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", prob, vx)
+
+
+def attention(x, p: LayerAttnParams, cfg: ModelConfig, *, positions=None,
+              causal: bool = True, kv_override=None, unroll: bool = False,
+              mesh=None):
+    """Full-sequence attention (train / prefill / encoder).
+
+    kv_override: (k, v, kpos) for cross-attention (q from x, kv precomputed).
+    Returns (out (B,S,d), k, v) — k/v returned for cache population at prefill.
+    """
+    B, S, _ = x.shape
+    q, k, v = _proj_qkv(x, p, cfg, mesh)
+    if positions is None:
+        positions = jnp.arange(S)
+    if kv_override is not None:
+        ko, vo, kpos = kv_override
+        k, v = ko, vo
+    else:
+        if cfg.rope_theta > 0:
+            cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        kpos = positions
+    k_cache, v_cache = k, v
+    scale = cfg.head_dim ** -0.5
+    grouped = FLAGS.gqa_grouped
+    win = cfg.sliding_window
+
+    # banded SWA: per q chunk only keys in [chunk_start - window, chunk_end)
+    # can attend; slice that band instead of scoring all S keys
+    banded = (FLAGS.swa_banded and win is not None and causal
+              and S > Q_CHUNK and S % Q_CHUNK == 0
+              and kv_override is None and win % Q_CHUNK == 0)
+
+    if S <= Q_CHUNK or S % Q_CHUNK != 0:  # small/ragged (whisper enc): unchunked
+        out = _sdpa_chunk(q, k, v, positions, kpos, win, causal, scale, grouped)
+    else:
+        nc = S // Q_CHUNK
+        qc = q.reshape(B, nc, Q_CHUNK, cfg.n_heads, cfg.head_dim).transpose(1, 0, 2, 3, 4)
+        pc = positions.reshape(nc, Q_CHUNK)
+
+        if banded:
+            band = win + Q_CHUNK          # keys visible to one q chunk
+            # pad keys in front so every chunk slices a fixed-size band
+            pad = band - Q_CHUNK
+            kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+            vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+            kpos_p = jnp.pad(kpos, (pad, 0), constant_values=-10 ** 9)
+
+            def body(_, ci):
+                qi = qc[ci]
+                pi = pc[ci]
+                start = ci * Q_CHUNK      # band ends at chunk end
+                kb = jax.lax.dynamic_slice_in_dim(kp, start, band, 1)
+                vb = jax.lax.dynamic_slice_in_dim(vp, start, band, 1)
+                pb = jax.lax.dynamic_slice_in_dim(kpos_p, start, band, 0)
+                return None, _sdpa_chunk(qi, kb, vb, pi, pb, win, causal,
+                                         scale, grouped)
+
+            _, oc = jax.lax.scan(body, None, jnp.arange(nc),
+                                 unroll=nc if unroll else 1)
+        else:
+            def body(_, qp):
+                qi, pi = qp
+                return None, _sdpa_chunk(qi, k, v, pi, kpos, win, causal,
+                                         scale, grouped)
+
+            _, oc = jax.lax.scan(body, None, (qc, pc),
+                                 unroll=nc if unroll else 1)
+        out = oc.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.n_heads, cfg.head_dim)
+
+    out = out.reshape(B, S, cfg.q_dim)
+    return jnp.einsum("bse,ed->bsd", out, p.wo), k_cache, v_cache
+
+
+def cache_size(cfg: ModelConfig, seq_len: int) -> int:
+    """Allocated cache length: SWA archs keep a ring buffer of window size."""
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def decode_attention(x, p: LayerAttnParams, cfg: ModelConfig, cache_k, cache_v,
+                     index, *, kv_override=None, mesh=None):
+    """Single-token decode. x: (B, 1, d); cache_k/v: (B, Smax, Hkv*Dh)
+    *flattened* on the kv dim so explicit shardings divide the model axis
+    (DESIGN.md §4); index: scalar i32 — tokens already in the cache.
+
+    RoPE is applied at insertion, so SWA ring buffers need no re-rotation.
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    q, k, v = _proj_qkv(x, p, cfg, mesh)
+    scale = cfg.head_dim ** -0.5
+    if kv_override is not None:
+        ko, vo, _ = kv_override
+        out = _sdpa_chunk(q, ko.astype(q.dtype), vo.astype(q.dtype),
+                          jnp.zeros(1, jnp.int32),
+                          jnp.zeros(ko.shape[1], jnp.int32), None, False,
+                          scale, FLAGS.gqa_grouped)
+        out = out.reshape(B, 1, cfg.q_dim)
+        return jnp.einsum("bse,ed->bsd", out, p.wo), cache_k, cache_v
+
+    if cfg.rope_theta > 0:
+        cos, sin = rope_angles(index[None], cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    smax = cache_k.shape[1]
+    slot = index % smax if cfg.sliding_window is not None else index
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.reshape(B, 1, cfg.kv_dim).astype(cache_k.dtype), (0, slot, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.reshape(B, 1, cfg.kv_dim).astype(cache_v.dtype), (0, slot, 0))
+
+    kc = cache_k.reshape(B, smax, cfg.n_kv_heads, cfg.head_dim).astype(q.dtype)
+    vc = cache_v.reshape(B, smax, cfg.n_kv_heads, cfg.head_dim).astype(q.dtype)
+    valid = jnp.arange(smax) <= jnp.minimum(index, smax - 1)  # ring: written slots
+    kpos = jnp.where(valid, 0, 10 ** 9)  # invalid slots fail the causal test
+    out = _sdpa_chunk(q, kc, vc, jnp.zeros(1, jnp.int32), kpos, None, True,
+                      scale, FLAGS.gqa_grouped)
+    out = out.reshape(B, 1, cfg.q_dim)
+    return jnp.einsum("bse,ed->bsd", out, p.wo), cache_k, cache_v

@@ -1,0 +1,85 @@
+"""The paper's accelerator model (Table II): two convolutional blocks
+(conv → maxpool → batchnorm → relu) followed by one fully connected layer.
+
+This is the model the ONNX-to-hardware flow compiles; it exists both as this
+plain-JAX definition (training + oracle) and as an IR graph
+(``repro.core.reader.cnn_to_ir``) lowered by the writers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.mnist_cnn import CNNConfig
+
+
+def init_params(cfg: CNNConfig, key) -> Dict[str, jax.Array]:
+    params: Dict[str, jax.Array] = {}
+    cin = cfg.in_channels
+    ks = jax.random.split(key, len(cfg.conv_channels) + 1)
+    for i, cout in enumerate(cfg.conv_channels):
+        fan = cfg.kernel_size * cfg.kernel_size * cin
+        params[f"conv{i}/w"] = (jax.random.normal(ks[i], (cfg.kernel_size, cfg.kernel_size, cin, cout)) / jnp.sqrt(fan)).astype(jnp.float32)
+        params[f"conv{i}/b"] = jnp.zeros((cout,), jnp.float32)
+        params[f"bn{i}/scale"] = jnp.ones((cout,), jnp.float32)
+        params[f"bn{i}/bias"] = jnp.zeros((cout,), jnp.float32)
+        params[f"bn{i}/mean"] = jnp.zeros((cout,), jnp.float32)
+        params[f"bn{i}/var"] = jnp.ones((cout,), jnp.float32)
+        cin = cout
+    params["fc/w"] = (jax.random.normal(ks[-1], (cfg.fc_in, cfg.n_classes)) / jnp.sqrt(cfg.fc_in)).astype(jnp.float32)
+    params["fc/b"] = jnp.zeros((cfg.n_classes,), jnp.float32)
+    return params
+
+
+def conv2d(x, w, b):
+    """x: (B, H, W, Cin); w: (kh, kw, Cin, Cout) — SAME padding, stride 1."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def maxpool(x, k: int):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, k, k, 1),
+                                 (1, k, k, 1), "VALID")
+
+
+def batchnorm(x, scale, bias, mean, var, eps: float = 1e-5):
+    inv = scale * jax.lax.rsqrt(var + eps)
+    return x * inv + (bias - mean * inv)
+
+
+def forward(params: Dict[str, jax.Array], x, cfg: CNNConfig,
+            train_stats: bool = False):
+    """x: (B, H, W, C) -> logits (B, n_classes).
+
+    train_stats: use batch statistics (training); else the stored running stats.
+    """
+    aux = {}
+    for i in range(len(cfg.conv_channels)):
+        x = conv2d(x, params[f"conv{i}/w"], params[f"conv{i}/b"])
+        x = maxpool(x, cfg.pool)
+        if train_stats:
+            mean = jnp.mean(x, axis=(0, 1, 2))
+            var = jnp.var(x, axis=(0, 1, 2))
+            aux[f"bn{i}/mean"], aux[f"bn{i}/var"] = mean, var
+        else:
+            mean, var = params[f"bn{i}/mean"], params[f"bn{i}/var"]
+        x = batchnorm(x, params[f"bn{i}/scale"], params[f"bn{i}/bias"], mean, var)
+        x = jax.nn.relu(x)
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc/w"] + params["fc/b"], aux
+
+
+def loss_fn(params, x, labels, cfg: CNNConfig) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, x, cfg, train_stats=True)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold), aux
+
+
+def accuracy(params, x, labels, cfg: CNNConfig) -> jax.Array:
+    logits, _ = forward(params, x, cfg)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,79 @@
+"""Shared model building blocks: norms, RoPE, activations, embedding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, w, b=None, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x * w.astype(jnp.float32)
+    if b is not None:
+        x = x + b.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def norm(x, w, kind: str):
+    return rmsnorm(x, w) if kind == "rmsnorm" else layernorm(x, w)
+
+
+def rope_angles(positions, d_head: int, theta: float):
+    """positions: (...,) int32 -> cos/sin of shape (..., d_head//2)."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, Dh); cos/sin: (S, Dh//2) or (B, S, Dh//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch & heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def embed_lookup(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x, table_or_head, tied: bool):
+    """x: (..., d) -> logits (..., Vp)."""
+    if tied:
+        return jnp.einsum("...d,vd->...v", x, table_or_head)
+    return jnp.einsum("...d,dv->...v", x, table_or_head)
+
+
+def cross_entropy(logits, labels, vocab_real: int):
+    """Masked CE over the *real* vocab (padded logits excluded)."""
+    logits = logits.astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    mask = jnp.arange(logits.shape[-1]) < vocab_real
+    logits = jnp.where(mask, logits, neg)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,149 @@
+"""Whisper-style encoder-decoder.
+
+The conv/mel audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, enc_seq, d_model).  Learned absolute positions
+(``enc_pos`` / ``dec_pos``), pre-LayerNorm, GELU MLPs, cross-attention from
+decoder to encoder output.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import LayerAttnParams, attention, decode_attention
+from repro.models.common import embed_lookup, norm, unembed
+from repro.models.transformer import _attn_params, _mlp, layer_tree
+
+
+def encode(params: Dict[str, jax.Array], frames, cfg: ModelConfig,
+           remat: bool = False, unroll: bool = False, mesh=None):
+    """frames: (B, enc_seq, d) stub embeddings -> (B, enc_seq, d)."""
+    x = frames + params["enc_pos"][None, : frames.shape[1]].astype(frames.dtype)
+    lt = layer_tree(params, "enc/")
+    positions = jnp.arange(frames.shape[1])
+
+    def layer(x, lp):
+        xn = norm(x, lp["attn_norm/w"], cfg.norm)
+        a, _, _ = attention(xn, _attn_params(lp), cfg, positions=positions,
+                            causal=False, unroll=unroll, mesh=mesh)
+        x = x + a
+        x = x + _mlp(norm(x, lp["mlp_norm/w"], cfg.norm), lp, cfg)
+        return x, None
+
+    if remat:
+        layer = jax.checkpoint(layer)
+    x, _ = jax.lax.scan(layer, x, lt, unroll=cfg.enc_layers if unroll else 1)
+    return norm(x, params["enc_final_norm/w"], cfg.norm)
+
+
+def _cross_kv(enc_out, lp, cfg: ModelConfig):
+    B, Se, _ = enc_out.shape
+    k = jnp.einsum("bsd,de->bse", enc_out, lp["cross/wk"])
+    v = jnp.einsum("bsd,de->bse", enc_out, lp["cross/wv"])
+    k = k.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def forward(params: Dict[str, jax.Array], tokens, frames, cfg: ModelConfig, *,
+            mesh: Optional[Mesh] = None, tp_total: int = 1, remat: bool = False,
+            collect_cache: bool = False, unroll: bool = False):
+    """Teacher-forced decode pass. tokens: (B, S); frames: (B, enc_seq, d)."""
+    enc_out = encode(params, frames, cfg, remat=remat, unroll=unroll, mesh=mesh)
+    B, S = tokens.shape
+    x = embed_lookup(params["embed/table"], tokens)
+    x = x + params["dec_pos"][None, :S].astype(x.dtype)
+    positions = jnp.arange(S)
+    enc_pos = jnp.arange(enc_out.shape[1])
+    lt = layer_tree(params)
+
+    def layer(x, lp):
+        xn = norm(x, lp["attn_norm/w"], cfg.norm)
+        a, k, v = attention(xn, _attn_params(lp), cfg, positions=positions,
+                            unroll=unroll, mesh=mesh)
+        x = x + a
+        ck, cv = _cross_kv(enc_out, lp, cfg)
+        xn = norm(x, lp["cross_norm/w"], cfg.norm)
+        c, _, _ = attention(xn, _attn_params(lp, "cross"), cfg, positions=positions,
+                            causal=False, kv_override=(ck, cv, enc_pos),
+                            unroll=unroll, mesh=mesh)
+        x = x + c
+        x = x + _mlp(norm(x, lp["mlp_norm/w"], cfg.norm), lp, cfg)
+        ys = (k, v, ck, cv) if collect_cache else None
+        return x, ys
+
+    if remat:
+        layer = jax.checkpoint(layer)
+    x, caches = jax.lax.scan(layer, x, lt, unroll=cfg.n_layers if unroll else 1)
+    x = norm(x, params["final_norm/w"], cfg.norm)
+    logits = unembed(x, params["lm_head/w"], False)
+    aux = {"lb_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+    if collect_cache:
+        return logits, aux, caches
+    return logits, aux
+
+
+class EncDecDecodeState(NamedTuple):
+    cache_k: jax.Array    # (L, B, Smax, Hkv*Dh) decoder self-attn (flat kv)
+    cache_v: jax.Array
+    cross_k: jax.Array    # (L, B, enc_seq, Hkv, Dh) precomputed from encoder
+    cross_v: jax.Array
+    index: jax.Array
+
+
+def init_decode_state(params, frames, cfg: ModelConfig, batch: int, seq_len: int,
+                      dtype=jnp.bfloat16) -> EncDecDecodeState:
+    """Runs the encoder and precomputes per-layer cross k/v."""
+    enc_out = encode(params, frames, cfg)
+    lt = layer_tree(params)
+
+    def layer(_, lp):
+        return None, _cross_kv(enc_out, lp, cfg)
+
+    _, (ck, cv) = jax.lax.scan(layer, None, lt)
+    L = cfg.n_layers
+    k = jnp.zeros((L, batch, seq_len, cfg.kv_dim), dtype)
+    return EncDecDecodeState(k, jnp.zeros_like(k), ck.astype(dtype), cv.astype(dtype),
+                             jnp.zeros((), jnp.int32))
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, seq_len: int,
+                          dtype=jnp.bfloat16) -> EncDecDecodeState:
+    L = cfg.n_layers
+    k = jax.ShapeDtypeStruct((L, batch, seq_len, cfg.kv_dim), dtype)
+    c = jax.ShapeDtypeStruct((L, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return EncDecDecodeState(k, k, c, c, jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def decode_step(params: Dict[str, jax.Array], tokens, state: EncDecDecodeState,
+                cfg: ModelConfig, *, mesh: Optional[Mesh] = None, tp_total: int = 1,
+                unroll: bool = False):
+    """tokens: (B, 1) -> (logits, new state)."""
+    idx = state.index
+    x = embed_lookup(params["embed/table"], tokens)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], idx, 1, 0)[None].astype(x.dtype)
+    lt = layer_tree(params)
+
+    def layer(x, xs_l):
+        lp, ck, cv, xk, xv = xs_l
+        xn = norm(x, lp["attn_norm/w"], cfg.norm)
+        a, nk, nv = decode_attention(xn, _attn_params(lp), cfg, ck, cv, idx,
+                                     mesh=mesh)
+        x = x + a
+        xn = norm(x, lp["cross_norm/w"], cfg.norm)
+        c, _, _ = decode_attention(xn, _attn_params(lp, "cross"), cfg, None, None, idx,
+                                   kv_override=(xk, xv, None), mesh=mesh)
+        x = x + c
+        x = x + _mlp(norm(x, lp["mlp_norm/w"], cfg.norm), lp, cfg)
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(layer, x, (lt, state.cache_k, state.cache_v,
+                                          state.cross_k, state.cross_v),
+                               unroll=cfg.n_layers if unroll else 1)
+    x = norm(x, params["final_norm/w"], cfg.norm)
+    logits = unembed(x, params["lm_head/w"], False)
+    return logits, EncDecDecodeState(nk, nv, state.cross_k, state.cross_v, idx + 1)

@@ -1,0 +1,144 @@
+"""Mixture-of-Experts block with ep×tp expert parallelism (DESIGN.md §4).
+
+Layout: the 16-way ``model`` axis factors into ``ep = gcd(E, 16)`` expert groups
+× ``tp = 16/ep`` tensor slices.  Expert weights are stored pre-arranged as
+``(tp_total, E/ep, d, f/tp)``; rank ``r`` (model-axis index) owns the tp-slice
+``r % tp`` of experts ``[(r//tp)·E/ep, (r//tp+1)·E/ep)``.
+
+Activations enter the block replicated over ``model``, so dispatch (capacity
+gather) and combine (scatter-add) are *collective-free*; the single ``psum``
+over ``model`` both merges expert outputs and completes the tp partial sums.
+FLOPs stay ∝ top-k via capacity-based token selection (one argsort + static
+dynamic-slices per local expert).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.models.common import swiglu
+from repro.models.params import moe_factors
+
+
+class MoELayerParams(NamedTuple):
+    router: jax.Array   # (d, E)
+    w_gate: jax.Array   # (tp_total, E/ep, d, f/tp)
+    w_up: jax.Array
+    w_down: jax.Array   # (tp_total, E/ep, f/tp, d)
+
+
+def route(x, router_w, top_k: int):
+    """x: (T, d) -> (probs (T,k) f32, experts (T,k) i32, logits (T,E) f32)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32))
+    vals, idx = jax.lax.top_k(logits, top_k)
+    probs = jax.nn.softmax(vals, axis=-1)
+    return probs, idx, logits
+
+
+def aux_losses(logits, experts, n_experts: int) -> Tuple[jax.Array, jax.Array]:
+    """(load-balance loss, router z-loss) — standard Switch/ST-MoE auxiliaries."""
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    me = jnp.mean(probs, axis=0)                                 # mean router prob
+    ce = jnp.mean(jax.nn.one_hot(experts[:, 0], n_experts), axis=0)  # top-1 load
+    lb = n_experts * jnp.sum(me * ce)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return lb, z
+
+
+def _expert_ffn(xe, wg, wu, wd):
+    """xe: (C, d); wg/wu: (d, fl); wd: (fl, d)."""
+    h = swiglu(xe @ wg, xe @ wu)
+    return h @ wd
+
+
+def moe_shard_body(x, p: MoELayerParams, cfg: ModelConfig, tp_total: int,
+                   rank) -> jax.Array:
+    """Per-model-rank body.  x: (T_loc, d) replicated over model;
+    p.w_*: local block (1, E/ep, d, fl) / (1, E/ep, fl, d); rank: model index."""
+    m = cfg.moe
+    E, k = m.n_experts, m.top_k
+    ep, tp = moe_factors(E, tp_total)
+    e_loc = E // ep
+    T = x.shape[0]
+    cap = max(int(math.ceil(T * k * m.capacity_factor / E)), 1)
+    cap = min(cap, T)
+
+    probs, experts, logits = route(x, p.router, k)               # (T,k)
+    flat_e = experts.reshape(-1)                                 # (T*k,)
+    flat_p = probs.reshape(-1)
+    flat_tok = jnp.arange(T * k, dtype=jnp.int32) // k
+
+    # group token-slots by expert with one stable argsort
+    order = jnp.argsort(flat_e * (T * k) + jnp.arange(T * k, dtype=jnp.int32))
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)                      # (E,)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+
+    grp = rank // tp                                             # my ep group
+    out = jnp.zeros_like(x)
+    wg = p.w_gate[0]                                             # (E/ep, d, fl)
+    wu = p.w_up[0]
+    wd = p.w_down[0]
+    for j in range(e_loc):                                       # unrolled, <= 5
+        e_id = grp * e_loc + j
+        # dynamic_slice clamps starts near the end; membership in the sorted
+        # segment is the correct validity test under clamping (capacity
+        # dropping = the segment's tail beyond `cap` never enters the slice)
+        start = jnp.minimum(starts[e_id], T * k - cap)
+        slot_idx = jax.lax.dynamic_slice(order, (start,), (cap,))
+        seg = jax.lax.dynamic_slice(sorted_e, (start,), (cap,))
+        pos_in_seg = jnp.arange(cap) + (start - starts[e_id])
+        valid = (seg == e_id) & (pos_in_seg < jnp.minimum(counts[e_id], cap))
+        tok = flat_tok[slot_idx]
+        xe = jnp.take(x, tok, axis=0) * valid[:, None].astype(x.dtype)
+        ye = _expert_ffn(xe, wg[j], wu[j], wd[j])
+        w = (flat_p[slot_idx] * valid).astype(x.dtype)
+        out = out.at[tok].add(ye * w[:, None], mode="drop")
+    lb, z = aux_losses(logits, experts, E)
+    return out, lb, z
+
+
+def moe_block(x, p: MoELayerParams, cfg: ModelConfig, mesh: Optional[Mesh],
+              tp_total: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y (B,S,d), load-balance loss, z loss)."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+
+    if mesh is None or tp_total == 1:
+        y, lb, z = moe_shard_body(xt, p, cfg, 1, 0)
+        return y.reshape(B, S, d), lb, z
+
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    ndp = 1
+    for ax in dp:
+        ndp *= mesh.shape[ax]
+    # tiny decode batches (e.g. long_500k, 1 token) can't shard over dp:
+    # replicate tokens instead (each data shard redundantly computes them)
+    tok_spec = P(dp, None) if (B * S) % ndp == 0 else P(None, None)
+    dp_axes = dp if tok_spec[0] is not None else ()
+
+    def body(xt, router, wg, wu, wd):
+        rank = jax.lax.axis_index("model")
+        pl = MoELayerParams(router, wg, wu, wd)
+        y, lb, z = moe_shard_body(xt, pl, cfg, tp_total, rank)
+        y = jax.lax.psum(y, "model")
+        if dp_axes:
+            lb = jax.lax.pmean(lb, dp_axes)
+            z = jax.lax.pmean(z, dp_axes)
+        return y, lb, z
+
+    y, lb, z = shard_map(
+        body, mesh=mesh,
+        in_specs=(tok_spec, P(), P("model", None, None, None),
+                  P("model", None, None, None), P("model", None, None, None)),
+        out_specs=(tok_spec, P(), P()),
+        check_rep=False,
+    )(xt, p.router, p.w_gate, p.w_up, p.w_down)
+    return y.reshape(B, S, d), lb, z

@@ -1,0 +1,186 @@
+"""Parameter tree definition: shapes, initialization, analytic counts.
+
+``param_shapes(cfg, max_seq, tp_total)`` is the single source of truth; init,
+counting, checkpointing and the dry-run all derive from it.
+
+MoE expert weights are stored pre-arranged in the expert-parallel layout
+``(tp_total, E/ep, d, f/tp)`` where ``ep = gcd(E, tp_total)`` and
+``tp = tp_total/ep`` (DESIGN.md §4): shard dim 0 over ``model`` and each rank
+holds its ep-group's experts' tp-slice.  Total element count is exactly E*d*f.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def moe_factors(n_experts: int, tp_total: int) -> Tuple[int, int]:
+    ep = math.gcd(n_experts, tp_total)
+    return ep, tp_total // ep
+
+
+def _attn_shapes(cfg: ModelConfig, L: int, prefix: str, bias: bool) -> Dict[str, tuple]:
+    d, q, kv = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    s = {
+        f"{prefix}_norm/w": (L, d),
+        f"{prefix}/wq": (L, d, q),
+        f"{prefix}/wk": (L, d, kv),
+        f"{prefix}/wv": (L, d, kv),
+        f"{prefix}/wo": (L, q, d),
+    }
+    if bias:
+        s[f"{prefix}/bq"] = (L, q)
+        s[f"{prefix}/bk"] = (L, kv)
+        s[f"{prefix}/bv"] = (L, kv)
+    return s
+
+
+def _mlp_shapes(cfg: ModelConfig, L: int, prefix: str = "mlp") -> Dict[str, tuple]:
+    d, f = cfg.d_model, cfg.d_ff
+    s = {f"{prefix}_norm/w": (L, d)}
+    if cfg.act == "swiglu":
+        s[f"{prefix}/w_gate"] = (L, d, f)
+        s[f"{prefix}/w_up"] = (L, d, f)
+        s[f"{prefix}/w_down"] = (L, f, d)
+    else:  # gelu MLP (whisper)
+        s[f"{prefix}/w_up"] = (L, d, f)
+        s[f"{prefix}/b_up"] = (L, f)
+        s[f"{prefix}/w_down"] = (L, f, d)
+        s[f"{prefix}/b_down"] = (L, d)
+    return s
+
+
+def _moe_shapes(cfg: ModelConfig, L: int, tp_total: int) -> Dict[str, tuple]:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    ep, tp = moe_factors(E, tp_total)
+    el, fl = E // ep, f // tp
+    return {
+        "mlp_norm/w": (L, d),
+        "moe/router": (L, d, E),
+        "moe/w_gate": (L, tp_total, el, d, fl),
+        "moe/w_up": (L, tp_total, el, d, fl),
+        "moe/w_down": (L, tp_total, el, fl, d),
+    }
+
+
+def _ssm_shapes(cfg: ModelConfig, L: int) -> Dict[str, tuple]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = cfg.d_inner
+    H = cfg.n_ssm_heads
+    gn = 2 * s.n_groups * s.d_state
+    conv_dim = d_inner + gn                 # conv over (x, B, C)
+    # separate projections (z | x | BC | dt) so each output dim shards
+    # cleanly over 'model' (fused 2*d_inner+2GN+H is rarely divisible)
+    return {
+        "ssm_norm/w": (L, d),
+        "ssm/w_z": (L, d, d_inner),
+        "ssm/w_x": (L, d, d_inner),
+        "ssm/w_bc": (L, d, gn),
+        "ssm/w_dt": (L, d, H),
+        "ssm/conv": (L, s.d_conv, conv_dim),
+        "ssm/A_log": (L, H),
+        "ssm/D": (L, H),
+        "ssm/dt_bias": (L, H),
+        "ssm/norm_w": (L, d_inner),
+        "ssm/w_out": (L, d_inner, d),
+    }
+
+
+def param_shapes(cfg: ModelConfig, max_seq: int = 0, tp_total: int = 1) -> Dict[str, tuple]:
+    """Flat {path: shape}.  Decoder stack paths are prefixed ``layers/`` and
+    carry a leading L dim (scanned); encoder stack uses ``enc/``."""
+    d, L = cfg.d_model, cfg.n_layers
+    shapes: Dict[str, tuple] = {
+        "embed/table": (cfg.vocab_padded, d),
+        "final_norm/w": (d,),
+    }
+    if not cfg.tie_embeddings:
+        shapes["lm_head/w"] = (d, cfg.vocab_padded)
+
+    layer: Dict[str, tuple] = {}
+    if cfg.family != "ssm":
+        layer.update(_attn_shapes(cfg, L, "attn", cfg.qkv_bias))
+    if cfg.family in ("ssm", "hybrid"):
+        layer.update(_ssm_shapes(cfg, L))
+    if cfg.moe is not None:
+        layer.update(_moe_shapes(cfg, L, tp_total))
+    elif cfg.d_ff > 0:
+        layer.update(_mlp_shapes(cfg, L))
+    shapes.update({f"layers/{k}": v for k, v in layer.items()})
+
+    if cfg.enc_layers:  # whisper encoder + cross attention + learned positions
+        Le = cfg.enc_layers
+        enc: Dict[str, tuple] = {}
+        enc.update(_attn_shapes(cfg, Le, "attn", cfg.qkv_bias))
+        enc.update(_mlp_shapes(cfg, Le))
+        shapes.update({f"enc/{k}": v for k, v in enc.items()})
+        shapes["enc_final_norm/w"] = (d,)
+        shapes["enc_pos"] = (cfg.enc_seq, d)
+        shapes["dec_pos"] = (max(max_seq, 8), d)
+        shapes.update({f"layers/{k}": v for k, v in _attn_shapes(cfg, L, "cross", False).items()})
+    if cfg.n_patches:
+        shapes["vision_proj/w"] = (d, d)
+    return shapes
+
+
+_F32_SUFFIXES = ("A_log", "dt_bias")
+
+
+def param_dtype(path: str, default) -> jnp.dtype:
+    if any(path.endswith(s) for s in _F32_SUFFIXES):
+        return jnp.float32
+    return default
+
+
+def init_params(cfg: ModelConfig, key, max_seq: int = 0, tp_total: int = 1) -> Dict[str, jax.Array]:
+    """Scaled-normal init matching ``param_shapes`` exactly."""
+    shapes = param_shapes(cfg, max_seq=max_seq, tp_total=tp_total)
+    dt = jnp.dtype(cfg.dtype)
+    params: Dict[str, jax.Array] = {}
+    keys = jax.random.split(key, len(shapes))
+    for (path, shape), k in zip(sorted(shapes.items()), keys):
+        pdt = param_dtype(path, dt)
+        if path.endswith("norm/w") or path.endswith("norm_w"):
+            params[path] = jnp.ones(shape, pdt)
+        elif path.endswith("/D"):
+            params[path] = jnp.ones(shape, pdt)
+        elif path.endswith("A_log"):
+            params[path] = jnp.log(jax.random.uniform(k, shape, jnp.float32, 1.0, 16.0))
+        elif path.endswith("dt_bias"):
+            u = jax.random.uniform(k, shape, jnp.float32, 1e-3, 0.1)
+            params[path] = jnp.log(jnp.expm1(u))  # inverse softplus
+        elif path.endswith(("/bq", "/bk", "/bv", "/b_up", "/b_down")):
+            params[path] = jnp.zeros(shape, pdt)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+            params[path] = (jax.random.normal(k, shape, jnp.float32) * std).astype(pdt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, max_seq: int = 0, tp_total: int = 1) -> Dict[str, jax.ShapeDtypeStruct]:
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        p: jax.ShapeDtypeStruct(s, param_dtype(p, dt))
+        for p, s in param_shapes(cfg, max_seq=max_seq, tp_total=tp_total).items()
+    }
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False, max_seq: int = 0) -> int:
+    """Total (or MoE-active) parameter count; positions/embeddings included."""
+    total = 0
+    for path, shape in param_shapes(cfg, max_seq=max_seq, tp_total=1).items():
+        n = int(np.prod(shape))
+        if active_only and "/moe/w_" in path:
+            m = cfg.moe
+            n = n * m.top_k // m.n_experts
+        total += n
+    return total

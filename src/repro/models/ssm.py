@@ -1,0 +1,234 @@
+"""Mamba-2 SSD (state-space duality) block: chunked train/prefill + O(1) decode.
+
+Chunked SSD (arXiv:2405.21060): within chunks of length Q the output is a
+masked attention-like quadratic form; across chunks a (H, P, N) state is
+carried by a linear recurrence (``lax.scan``).  The intra-chunk part is the
+compute hot-spot and has a Pallas kernel (``repro.kernels.ssd_scan``); this
+module is the pure-jnp reference used by the models and the kernel oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import rmsnorm
+
+
+class SSMLayerParams(NamedTuple):
+    w_z: jax.Array      # (d, d_inner) — gate projection
+    w_x: jax.Array      # (d, d_inner) — value projection
+    w_bc: jax.Array     # (d, 2*G*N)   — B/C projection
+    w_dt: jax.Array     # (d, H)       — dt projection
+    conv: jax.Array     # (K, conv_dim)
+    A_log: jax.Array    # (H,) f32
+    D: jax.Array        # (H,)
+    dt_bias: jax.Array  # (H,) f32
+    norm_w: jax.Array   # (d_inner,)
+    w_out: jax.Array    # (d_inner, d)
+
+
+class SSMState(NamedTuple):
+    ssd: jax.Array      # (B, H, P, N) f32
+    conv: jax.Array     # (B, K-1, conv_dim)
+
+
+def _project_in(x, p: "SSMLayerParams"):
+    """Separate z/x/BC/dt projections (TP-clean layout, DESIGN.md §4)."""
+    z = jnp.einsum("...d,de->...e", x, p.w_z)
+    xv = jnp.einsum("...d,de->...e", x, p.w_x)
+    bc = jnp.einsum("...d,de->...e", x, p.w_bc)
+    dt = jnp.einsum("...d,de->...e", x, p.w_dt)
+    return z, jnp.concatenate([xv, bc], axis=-1), dt  # dt: (..., H)
+
+
+def _causal_conv(xbc, w, state: Optional[jax.Array] = None):
+    """Depthwise causal conv via K shifted adds.  xbc: (B, S, C); w: (K, C).
+
+    state: (B, K-1, C) previous inputs (decode);  returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)           # (B, S+K-1, C)
+    y = sum(xp[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):, :]
+    return jax.nn.silu(y.astype(jnp.float32)).astype(xbc.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, C, D, chunk: int, init_state=None):
+    """Chunked SSD scan (pure jnp oracle).
+
+    x: (B, S, H, P); dt: (B, S, H) f32 (post-softplus); A: (H,) f32 (negative);
+    Bm/C: (B, S, G, N); D: (H,).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, Pd = x.shape
+    G = Bm.shape[2]
+    N = Bm.shape[3]
+    S0 = S
+    if S % chunk != 0:
+        # zero-pad to a chunk multiple: dt=0 rows neither update the state
+        # (dt_j factor) nor decay it (exp(0)=1), so padding is exact
+        pad = chunk - S % chunk
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, Bm, C = zf(x), zf(dt), zf(Bm), zf(C)
+        S = S + pad
+    nc = S // chunk
+    rep = H // G
+
+    xc = x.reshape(Bsz, nc, chunk, H, Pd)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, chunk, G, N), rep, axis=3)   # (B,nc,Q,H,N)
+    Cc = jnp.repeat(C.reshape(Bsz, nc, chunk, G, N), rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                                # (B,nc,Q,H) <= 0
+    l = jnp.cumsum(dA, axis=2)                                       # cumulative log-decay
+    l_last = l[:, :, -1:, :]                                         # (B,nc,1,H)
+
+    # intra-chunk: att[i,j] = (C_i . B_j) * exp(l_i - l_j) * dt_j,  j <= i
+    from repro.perf import FLAGS
+    idt = jnp.bfloat16 if (FLAGS.ssd_bf16_intra
+                           and x.dtype == jnp.bfloat16) else jnp.float32
+    li = l[:, :, :, None, :]                                         # (B,nc,Q,1,H)
+    lj = l[:, :, None, :, :]                                         # (B,nc,1,Q,H)
+    decay = jnp.exp(jnp.minimum(li - lj, 0.0)).astype(idt)           # mask j>i later
+    cb = jnp.einsum("bcqhn,bckhn->bcqkh", Cc.astype(idt), Bc.astype(idt))
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    att = cb * decay * dtc[:, :, None, :, :].astype(idt)
+    att = jnp.where(causal[None, None, :, :, None], att, jnp.zeros((), idt))
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", att, xc.astype(idt)
+                         ).astype(jnp.float32)
+
+    # chunk summaries: S_c = sum_j exp(l_last - l_j) dt_j B_j x_j^T   (B,nc,H,N,P)
+    w_j = jnp.exp(l_last - l) * dtc                                  # (B,nc,Q,H)
+    S_c = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", w_j, Bc.astype(jnp.float32),
+                     xc.astype(jnp.float32))
+
+    # inter-chunk recurrence over nc (sequential scan)
+    chunk_decay = jnp.exp(l_last[:, :, 0, :])                        # (B,nc,H)
+    s0 = (jnp.zeros((Bsz, H, N, Pd), jnp.float32) if init_state is None
+          else init_state.transpose(0, 1, 3, 2).astype(jnp.float32))  # (B,H,N,P)
+
+    def body(s_prev, inp):
+        dec, s_new = inp                                             # (B,H), (B,H,N,P)
+        s = s_prev * dec[:, :, None, None] + s_new
+        return s, s_prev
+
+    s_fin, s_prefix = jax.lax.scan(
+        body, s0, (chunk_decay.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)))
+    s_prefix = s_prefix.transpose(1, 0, 2, 3, 4)                     # (B,nc,H,N,P)
+
+    # inter-chunk contribution: y_i += C_i . (exp(l_i) * state_prefix)
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", Cc.astype(jnp.float32) *
+                         jnp.exp(l)[..., None], s_prefix)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pd)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y[:, :S0].astype(x.dtype), s_fin.transpose(0, 1, 3, 2)    # state (B,H,P,N)
+
+
+def ssd_decode_step(x, dt, A, Bm, C, D, state):
+    """One-token SSD update.  x: (B,H,P); dt: (B,H); Bm/C: (B,G,N);
+    state: (B,H,P,N) f32.  Returns (y (B,H,P), new_state)."""
+    H = x.shape[1]
+    rep = H // Bm.shape[1]
+    Bx = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)             # (B,H,N)
+    Cx = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt * A[None, :])                                    # (B,H)
+    upd = (dt[:, :, None] * x.astype(jnp.float32))[..., None] * Bx[:, :, None, :]
+    new_state = state * dA[:, :, None, None] + upd                   # (B,H,P,N)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cx)
+    y = y + x.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+def _constrain_inner(t, mesh):
+    """(B, S, d_inner-like) -> last dim over 'model' (divisible by design)."""
+    from repro.perf import FLAGS
+    if mesh is None or not FLAGS.ssd_constraint:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    bspec = dp if t.shape[0] % 2 == 0 else None
+    spec = P(bspec, None, "model") if t.shape[-1] % mesh.shape["model"] == 0 \
+        else P(bspec, None, None)
+    return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+
+def ssm_block(x, p: SSMLayerParams, cfg: ModelConfig,
+              state: Optional[SSMState] = None, use_kernel: bool = False,
+              mesh=None):
+    """Full-sequence SSM mixer.  x: (B, S, d) -> (y (B,S,d), final SSMState)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    H, Pd = cfg.n_ssm_heads, s.d_head
+    z, xbc, dt = _project_in(x, p)
+    xbc, conv_state = _causal_conv(xbc, p.conv, None if state is None else state.conv)
+    xi, BC = jnp.split(xbc, [cfg.d_inner], axis=-1)
+    z = _constrain_inner(z, mesh)
+    xi = _constrain_inner(xi, mesh)
+    Bm, Cm = jnp.split(BC, 2, axis=-1)
+    Bm = Bm.reshape(B, S, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)
+    A = -jnp.exp(p.A_log)
+    xh = xi.reshape(B, S, H, Pd)
+    from repro.perf import FLAGS
+    if mesh is not None and FLAGS.ssd_constraint:
+        # pin the SSD head layout (uneven head counts pad on 'model') so GSPMD
+        # never reshards or partial-sums across the chunked scan
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        bspec = dp if B % 2 == 0 else None
+        xh = jax.lax.with_sharding_constraint(
+            xh, NamedSharding(mesh, P(bspec, None, "model", None)))
+        dt = jax.lax.with_sharding_constraint(
+            dt, NamedSharding(mesh, P(bspec, None, "model")))
+    if use_kernel:
+        from repro.kernels.ssd_scan.ops import ssd_chunked_kernel
+        y, ssd_state = ssd_chunked_kernel(
+            xh, dt, A, Bm, Cm, p.D, s.chunk,
+            None if state is None else state.ssd)
+    else:
+        y, ssd_state = ssd_chunked(xh, dt, A, Bm, Cm, p.D, s.chunk,
+                                   None if state is None else state.ssd)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p.norm_w)
+    out = jnp.einsum("bse,ed->bsd", y, p.w_out)
+    return out, SSMState(ssd=ssd_state, conv=conv_state)
+
+
+def ssm_decode(x, p: SSMLayerParams, cfg: ModelConfig, state: SSMState):
+    """One-token SSM step.  x: (B, 1, d) -> (y (B,1,d), new state)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    H, Pd = cfg.n_ssm_heads, s.d_head
+    z, xbc, dt = _project_in(x[:, 0], p)
+    # conv state update: append current xbc, take window
+    xp = jnp.concatenate([state.conv.astype(xbc.dtype), xbc[:, None, :]], axis=1)
+    y = sum(xp[:, i, :] * p.conv[i] for i in range(p.conv.shape[0]))
+    xbc = jax.nn.silu(y.astype(jnp.float32)).astype(xbc.dtype)
+    conv_state = xp[:, 1:, :]
+    xi, BC = jnp.split(xbc, [cfg.d_inner], axis=-1)
+    Bm, Cm = jnp.split(BC, 2, axis=-1)
+    Bm = Bm.reshape(B, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)
+    A = -jnp.exp(p.A_log)
+    yh, ssd_state = ssd_decode_step(xi.reshape(B, H, Pd), dt, A, Bm, Cm, p.D, state.ssd)
+    yh = yh.reshape(B, cfg.d_inner)
+    yh = rmsnorm(yh * jax.nn.silu(z.astype(jnp.float32)).astype(yh.dtype), p.norm_w)
+    out = jnp.einsum("be,ed->bd", yh, p.w_out)
+    return out[:, None, :], SSMState(ssd=ssd_state, conv=conv_state)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> SSMState:
+    s = cfg.ssm
+    H, Pd = cfg.n_ssm_heads, s.d_head
+    conv_dim = cfg.d_inner + 2 * s.n_groups * s.d_state
+    return SSMState(
+        ssd=jnp.zeros((batch, H, Pd, s.d_state), jnp.float32),
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    )

@@ -1,0 +1,235 @@
+"""Decoder-only LM assembly (dense / MoE / SSM / hybrid / VLM-stub).
+
+Layers are stacked on a leading L dim and executed with ``lax.scan`` so the
+HLO stays compact for the 512-device dry-run; the per-layer body is optionally
+rematerialized (``remat=True``) for the training memory term.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import LayerAttnParams, attention, cache_size, decode_attention
+from repro.models.common import embed_lookup, norm, swiglu, gelu, unembed
+from repro.models.moe import MoELayerParams, moe_block
+from repro.models.ssm import SSMLayerParams, SSMState, init_ssm_state
+
+LAYER_PREFIX = "layers/"
+
+
+def layer_tree(params: Dict[str, jax.Array], prefix: str = LAYER_PREFIX) -> Dict[str, jax.Array]:
+    return {k[len(prefix):]: v for k, v in params.items() if k.startswith(prefix)}
+
+
+def _attn_params(lp: Dict[str, jax.Array], prefix: str = "attn") -> LayerAttnParams:
+    return LayerAttnParams(
+        wq=lp[f"{prefix}/wq"], wk=lp[f"{prefix}/wk"], wv=lp[f"{prefix}/wv"],
+        wo=lp[f"{prefix}/wo"],
+        bq=lp.get(f"{prefix}/bq"), bk=lp.get(f"{prefix}/bk"), bv=lp.get(f"{prefix}/bv"))
+
+
+def _ssm_params(lp: Dict[str, jax.Array]) -> SSMLayerParams:
+    return SSMLayerParams(
+        w_z=lp["ssm/w_z"], w_x=lp["ssm/w_x"], w_bc=lp["ssm/w_bc"],
+        w_dt=lp["ssm/w_dt"], conv=lp["ssm/conv"], A_log=lp["ssm/A_log"],
+        D=lp["ssm/D"], dt_bias=lp["ssm/dt_bias"], norm_w=lp["ssm/norm_w"],
+        w_out=lp["ssm/w_out"])
+
+
+def _moe_params(lp: Dict[str, jax.Array]) -> MoELayerParams:
+    return MoELayerParams(router=lp["moe/router"], w_gate=lp["moe/w_gate"],
+                          w_up=lp["moe/w_up"], w_down=lp["moe/w_down"])
+
+
+def _mlp(x, lp, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        h = swiglu(jnp.einsum("bsd,df->bsf", x, lp["mlp/w_gate"]),
+                   jnp.einsum("bsd,df->bsf", x, lp["mlp/w_up"]))
+        return jnp.einsum("bsf,fd->bsd", h, lp["mlp/w_down"])
+    h = gelu(jnp.einsum("bsd,df->bsf", x, lp["mlp/w_up"]) + lp["mlp/b_up"])
+    return jnp.einsum("bsf,fd->bsd", h, lp["mlp/w_down"]) + lp["mlp/b_down"]
+
+
+def _token_mixer(x, lp, cfg: ModelConfig, positions, mesh, unroll: bool = False):
+    """Full-sequence mixer for one layer; returns (dx, (k, v, ssm_state))."""
+    k = v = ssm_state = None
+    if cfg.family == "ssm":
+        xn = norm(x, lp["ssm_norm/w"], cfg.norm)
+        dx, ssm_state = ssm_mod.ssm_block(xn, _ssm_params(lp), cfg, mesh=mesh)
+    elif cfg.hybrid:
+        xn = norm(x, lp["attn_norm/w"], cfg.norm)
+        a, k, v = attention(xn, _attn_params(lp), cfg, positions=positions,
+                            unroll=unroll, mesh=mesh)
+        s, ssm_state = ssm_mod.ssm_block(norm(x, lp["ssm_norm/w"], cfg.norm),
+                                         _ssm_params(lp), cfg, mesh=mesh)
+        dx = 0.5 * (a + s)
+    else:
+        xn = norm(x, lp["attn_norm/w"], cfg.norm)
+        dx, k, v = attention(xn, _attn_params(lp), cfg, positions=positions,
+                             unroll=unroll, mesh=mesh)
+    return dx, (k, v, ssm_state)
+
+
+def _channel_mixer(x, lp, cfg: ModelConfig, mesh, tp_total):
+    """FFN / MoE part; returns (dx, (lb, z)) aux losses."""
+    if cfg.moe is not None:
+        xn = norm(x, lp["mlp_norm/w"], cfg.norm)
+        dx, lb, z = moe_block(xn, _moe_params(lp), cfg, mesh, tp_total)
+        return dx, (lb, z)
+    if cfg.d_ff > 0:
+        xn = norm(x, lp["mlp_norm/w"], cfg.norm)
+        return _mlp(xn, lp, cfg), (jnp.zeros((), jnp.float32),) * 2
+    return jnp.zeros_like(x), (jnp.zeros((), jnp.float32),) * 2
+
+
+def embed_inputs(params, cfg: ModelConfig, tokens, patch_embeds=None, mesh=None):
+    x = embed_lookup(params["embed/table"], tokens)
+    if cfg.n_patches and patch_embeds is not None:
+        pe = jnp.einsum("bpd,de->bpe", patch_embeds.astype(x.dtype), params["vision_proj/w"])
+        x = jnp.concatenate([pe, x[:, cfg.n_patches:, :]], axis=1)
+    return x
+
+
+def forward(params: Dict[str, jax.Array], tokens, cfg: ModelConfig, *,
+            mesh: Optional[Mesh] = None, tp_total: int = 1,
+            patch_embeds=None, remat: bool = False,
+            collect_cache: bool = False, unroll: bool = False):
+    """tokens: (B, S) -> (logits (B, S, Vp), aux dict).
+
+    With ``collect_cache`` also returns stacked per-layer (k, v, ssm_state)
+    for prefill→decode handoff.
+    """
+    B, S = tokens.shape
+    x = embed_inputs(params, cfg, tokens, patch_embeds, mesh)
+    positions = jnp.arange(S)
+    lt = layer_tree(params)
+
+    def layer(carry, lp):
+        x, lb_acc, z_acc = carry
+        dx, cache = _token_mixer(x, lp, cfg, positions, mesh, unroll)
+        x = x + dx  # noqa: PLW2901
+        dx, (lb, z) = _channel_mixer(x, lp, cfg, mesh, tp_total)
+        x = x + dx
+        ys = cache if collect_cache else None
+        return (x, lb_acc + lb, z_acc + z), ys
+
+    if remat:
+        layer = jax.checkpoint(layer)
+
+    zero = jnp.zeros((), jnp.float32)
+    (x, lb, z), caches = jax.lax.scan(layer, (x, zero, zero), lt,
+                                      unroll=cfg.n_layers if unroll else 1)
+    x = norm(x, params["final_norm/w"], cfg.norm)
+    logits = unembed(x, params["embed/table"] if cfg.tie_embeddings
+                     else params["lm_head/w"], cfg.tie_embeddings)
+    aux = {"lb_loss": lb / cfg.n_layers, "z_loss": z / cfg.n_layers}
+    if collect_cache:
+        return logits, aux, caches
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    cache_k: Optional[jax.Array]   # (L, B, Smax, Hkv*Dh) — kv dim flattened
+    cache_v: Optional[jax.Array]
+    ssm_ssd: Optional[jax.Array]   # (L, B, H*P, N) f32 — head dim flattened
+    ssm_conv: Optional[jax.Array]  # (L, B, K-1, conv_dim)
+    index: jax.Array               # scalar i32: tokens already in cache
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    L = cfg.n_layers
+    ck = cv = sd = sc = None
+    if cfg.family != "ssm":
+        smax = cache_size(cfg, seq_len)
+        ck = jnp.zeros((L, batch, smax, cfg.kv_dim), dtype)
+        cv = jnp.zeros_like(ck)
+    if cfg.family in ("ssm", "hybrid"):
+        st = init_ssm_state(cfg, batch, dtype)
+        sd = jnp.zeros((L, batch, cfg.d_inner, cfg.ssm.d_state), jnp.float32)
+        sc = jnp.broadcast_to(st.conv[None], (L,) + st.conv.shape)
+    return DecodeState(ck, cv, sd, sc, jnp.zeros((), jnp.int32))
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, seq_len: int,
+                          dtype=jnp.bfloat16) -> DecodeState:
+    proto = jax.eval_shape(lambda: init_decode_state(cfg, batch, seq_len, dtype))
+    return proto
+
+
+def decode_step(params: Dict[str, jax.Array], tokens, state: DecodeState,
+                cfg: ModelConfig, *, mesh: Optional[Mesh] = None,
+                tp_total: int = 1, unroll: bool = False):
+    """tokens: (B, 1) -> (logits (B, 1, Vp), new DecodeState)."""
+    x = embed_lookup(params["embed/table"], tokens)
+    lt = layer_tree(params)
+    idx = state.index
+
+    def _unflat_ssd(sd):
+        B = sd.shape[0]
+        return sd.reshape(B, cfg.n_ssm_heads, cfg.ssm.d_head, cfg.ssm.d_state)
+
+    def _flat_ssd(sd):
+        B = sd.shape[0]
+        return sd.reshape(B, cfg.d_inner, cfg.ssm.d_state)
+
+    def layer(x, lp_and_cache):
+        lp, ck, cv, sd, sc = lp_and_cache
+        new = [ck, cv, sd, sc]
+        if cfg.family == "ssm":
+            xn = norm(x, lp["ssm_norm/w"], cfg.norm)
+            dx, st = ssm_mod.ssm_decode(xn, _ssm_params(lp), cfg,
+                                        SSMState(_unflat_ssd(sd), sc))
+            new[2], new[3] = _flat_ssd(st.ssd), st.conv
+        elif cfg.hybrid:
+            xn = norm(x, lp["attn_norm/w"], cfg.norm)
+            a, nk, nv = decode_attention(xn, _attn_params(lp), cfg, ck, cv, idx,
+                                         mesh=mesh)
+            s, st = ssm_mod.ssm_decode(norm(x, lp["ssm_norm/w"], cfg.norm),
+                                       _ssm_params(lp), cfg,
+                                       SSMState(_unflat_ssd(sd), sc))
+            dx = 0.5 * (a + s)
+            new[0], new[1], new[2], new[3] = nk, nv, _flat_ssd(st.ssd), st.conv
+        else:
+            xn = norm(x, lp["attn_norm/w"], cfg.norm)
+            dx, nk, nv = decode_attention(xn, _attn_params(lp), cfg, ck, cv, idx,
+                                          mesh=mesh)
+            new[0], new[1] = nk, nv
+        x = x + dx
+        dx, _ = _channel_mixer(x, lp, cfg, mesh, tp_total)
+        return x + dx, tuple(new)
+
+    dummy = jnp.zeros((cfg.n_layers, 1, 1), jnp.int8)
+    xs = (lt,
+          state.cache_k if state.cache_k is not None else dummy,
+          state.cache_v if state.cache_v is not None else dummy,
+          state.ssm_ssd if state.ssm_ssd is not None else dummy,
+          state.ssm_conv if state.ssm_conv is not None else dummy)
+
+    def body(x, xs_l):
+        lp = xs_l[0]
+        return layer(x, (lp, *xs_l[1:]))
+
+    x, (nk, nv, nsd, nsc) = jax.lax.scan(body, x, xs,
+                                         unroll=cfg.n_layers if unroll else 1)
+    x = norm(x, params["final_norm/w"], cfg.norm)
+    logits = unembed(x, params["embed/table"] if cfg.tie_embeddings
+                     else params["lm_head/w"], cfg.tie_embeddings)
+    new_state = DecodeState(
+        cache_k=None if state.cache_k is None else nk,
+        cache_v=None if state.cache_v is None else nv,
+        ssm_ssd=None if state.ssm_ssd is None else nsd,
+        ssm_conv=None if state.ssm_conv is None else nsc,
+        index=idx + 1)
+    return logits, new_state

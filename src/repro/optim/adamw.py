@@ -1,0 +1,79 @@
+"""AdamW with cosine schedule, global-norm clipping and f32 moments.
+
+Flat-dict pytrees throughout (matches repro.models.params).  Moments are
+sharded ZeRO-1 style by the runtime (sharding.opt_state_spec)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    mu: Dict[str, jax.Array]
+    nu: Dict[str, jax.Array]
+    count: jax.Array
+
+
+def init_opt_state(params: Dict[str, jax.Array]) -> OptState:
+    zeros = {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()}
+    return OptState(mu=zeros,
+                    nu={k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()},
+                    count=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def global_norm(tree: Dict[str, jax.Array]):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in tree.values()))
+
+
+_NO_DECAY = ("norm/w", "norm_w", "/b", "bias", "A_log", "dt_bias", "/D",
+             "bq", "bk", "bv", "b_up", "b_down")
+
+
+def apply_updates(params: Dict[str, jax.Array], grads: Dict[str, jax.Array],
+                  state: OptState, cfg: OptConfig
+                  ) -> Tuple[Dict[str, jax.Array], OptState, Dict[str, jax.Array]]:
+    count = state.count + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-6))
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.betas
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    new_p, new_mu, new_nu = {}, {}, {}
+    for k, p in params.items():
+        g = grads[k].astype(jnp.float32) * scale
+        mu = b1 * state.mu[k] + (1 - b1) * g
+        nu = b2 * state.nu[k] + (1 - b2) * g * g
+        upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        if cfg.weight_decay > 0 and not any(k.endswith(s) for s in _NO_DECAY):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p[k] = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        new_mu[k], new_nu[k] = mu, nu
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_p, OptState(new_mu, new_nu, count), metrics

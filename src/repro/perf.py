@@ -1,0 +1,37 @@
+"""Performance flags (§Perf hillclimb knobs).
+
+Defaults are the OPTIMIZED configuration; ``--baseline`` in launch/dryrun.py
+restores the paper-faithful first-cut behavior so both rows of EXPERIMENTS.md
+§Perf stay reproducible from the same tree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass
+class PerfFlags:
+    # H1 (collective): constrain q/k/v to head-sharded layouts so GSPMD never
+    # splits the d_head contraction (which all-reduces full score tensors)
+    attn_head_constraint: bool = True
+    # H2 (memory): intra-chunk SSD math in bf16 (states stay f32)
+    ssd_bf16_intra: bool = True
+    # H2b (memory): constrain SSD inner activations to model-sharded layouts
+    ssd_constraint: bool = True
+    # H3 (memory): GQA attention without materializing repeated kv heads
+    gqa_grouped: bool = True
+    # H4 (memory): sliding-window prefill computes only the key band
+    swa_banded: bool = True
+    # H5 (memory): keep attention score tensors in bf16 when activations are
+    # bf16 (softmax max-subtraction keeps this stable at inference precision)
+    attn_bf16_scores: bool = True
+
+
+FLAGS = PerfFlags()
+
+
+def set_baseline() -> None:
+    global FLAGS
+    FLAGS = PerfFlags(attn_head_constraint=False, ssd_bf16_intra=False,
+                      ssd_constraint=False, gqa_grouped=False,
+                      swa_banded=False, attn_bf16_scores=False)

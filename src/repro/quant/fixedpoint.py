@@ -1,0 +1,46 @@
+"""Faithful fixed-point (Qm.n) arithmetic simulation — the ``ap_fixed`` analogue.
+
+Fake-quantization keeps values on the exact 2^-frac grid in f32; products and
+sums of grid values with <=23 mantissa bits are exact in f32, so the simulated
+network is bit-equivalent to an integer datapath with wide accumulators (the
+paper's HLS MACs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QType
+
+
+def quantize(x, qt: QType):
+    """Round to the Qm.n grid and saturate.  Returns the *integer code* (f32)."""
+    if qt.is_float:
+        return x
+    inv = 2.0 ** qt.frac
+    code = jnp.round(x.astype(jnp.float32) * inv)
+    return jnp.clip(code, qt.qmin, qt.qmax)
+
+
+def dequantize(code, qt: QType):
+    if qt.is_float:
+        return code
+    return code * qt.scale
+
+
+def fake_quant(x, qt: QType):
+    """x -> nearest representable Qm.n value (straight-through estimator grad)."""
+    if qt.is_float:
+        return x
+    y = dequantize(quantize(x, qt), qt)
+    return x + jax.lax.stop_gradient(y - x)
+
+
+def quant_error(x, qt: QType):
+    return jnp.max(jnp.abs(fake_quant(x, qt) - x))
+
+
+def zero_fraction(x, qt: QType):
+    """Fraction of values that quantize to exactly 0 (Table II 'Zero-weights')."""
+    if qt.is_float:
+        return jnp.mean((x == 0).astype(jnp.float32))
+    return jnp.mean((quantize(x, qt) == 0).astype(jnp.float32))

@@ -1,0 +1,43 @@
+"""Bit-packing for sub-byte weight storage (int4: 2/byte, int2: 4/byte).
+
+Packing is what turns low weight precision into a real HBM-bandwidth win on
+TPU (the paper's BRAM-column effect); ``repro.kernels.qmatmul`` unpacks in-VMEM.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_int4(codes):
+    """codes: int8 array in [-8, 7], last dim even -> uint8 packed (…, n/2)."""
+    assert codes.shape[-1] % 2 == 0
+    u = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    return lo | (hi << 4)
+
+
+def unpack_int4(packed):
+    """uint8 (…, n/2) -> int8 (…, n) in [-8, 7]."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def pack_int2(codes):
+    """codes: int8 in [-2, 1], last dim % 4 == 0 -> uint8 packed (…, n/4)."""
+    assert codes.shape[-1] % 4 == 0
+    u = (codes.astype(jnp.int32) & 0x3).astype(jnp.uint8)
+    b0, b1, b2, b3 = u[..., 0::4], u[..., 1::4], u[..., 2::4], u[..., 3::4]
+    return b0 | (b1 << 2) | (b2 << 4) | (b3 << 6)
+
+
+def unpack_int2(packed):
+    outs = []
+    for sh in (0, 2, 4, 6):
+        v = ((packed >> sh) & 0x3).astype(jnp.int8)
+        outs.append(jnp.where(v >= 2, v - 4, v))
+    out = jnp.stack(outs, axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 4)

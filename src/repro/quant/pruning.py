@@ -1,0 +1,61 @@
+"""Computation Reduction (paper §II-B-a): magnitude pruning + zero accounting.
+
+On TPU the MXU cannot skip individual zero multiplications; the exploitable
+effects are (a) the *memory* side (packed sparse/low-bit weights shrink HBM
+traffic) and (b) structured sparsity that removes whole blocks.  We implement
+magnitude + structured N:M pruning and account for both in the roofline model.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.ptq import is_quantizable
+
+
+def magnitude_prune(w, sparsity: float):
+    """Zero exactly the ``sparsity`` fraction of smallest-|w| entries
+    (rank-based, deterministic under ties)."""
+    if sparsity <= 0.0:
+        return w
+    k = int(w.size * sparsity)
+    if k == 0:
+        return w
+    flat = jnp.abs(w).reshape(-1)
+    order = jnp.argsort(flat, stable=True)
+    keep = jnp.ones_like(flat, bool).at[order[:k]].set(False)
+    return (w.reshape(-1) * keep).reshape(w.shape).astype(w.dtype)
+
+
+def nm_prune(w, n: int = 2, m: int = 4):
+    """Structured N:M pruning along the last dim (keep n largest of every m)."""
+    assert w.shape[-1] % m == 0
+    g = w.reshape(*w.shape[:-1], w.shape[-1] // m, m)
+    mag = jnp.abs(g)
+    kth = jnp.sort(mag, axis=-1)[..., m - n][..., None]
+    keep = mag >= kth
+    return (g * keep).reshape(w.shape).astype(w.dtype)
+
+
+def prune_tree(params: Dict[str, jax.Array], sparsity: float,
+               structured: bool = False) -> Tuple[Dict[str, jax.Array], Dict[str, float]]:
+    out, zeros, total = {}, 0.0, 0
+    for path, w in params.items():
+        if is_quantizable(path, w):
+            out[path] = nm_prune(w) if structured else magnitude_prune(w, sparsity)
+            zeros += float(jnp.mean((out[path] == 0).astype(jnp.float32))) * w.size
+            total += w.size
+        else:
+            out[path] = w
+    return out, {"zero_weight_frac": zeros / max(total, 1)}
+
+
+def zero_weight_fraction(params: Dict[str, jax.Array]) -> float:
+    zeros, total = 0.0, 0
+    for path, w in params.items():
+        if is_quantizable(path, w):
+            zeros += float(jnp.mean((w == 0).astype(jnp.float32))) * w.size
+            total += w.size
+    return zeros / max(total, 1)

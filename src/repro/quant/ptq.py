@@ -1,0 +1,156 @@
+"""Post-training quantization (the paper's regime, §IV: "quantized using
+post-training quantization").
+
+Two entry points:
+
+* ``quantize_tree_fixed``   — paper-faithful Qm.n fake-quant of a param tree
+  for a ``Dx-Wy`` point (weights here; activations are quantized at runtime by
+  the writers / LM forward via ``ActQuant``).
+* ``quantize_tree_native``  — MXU-native weight-only quantization: symmetric
+  per-output-channel int8 master + f32 scales; W4/W2 are *derived views* of the
+  same master (nested truncation), which is what lets the adaptive accelerator
+  share one weight copy across working points (DESIGN.md §2, MDC row).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.fixedpoint import fake_quant, zero_fraction
+from repro.quant.qtypes import QType, DatatypeConfig, fixed_for_range
+
+# parameters that stay in high precision (norms, scalar gains, recurrence)
+_SKIP_SUFFIXES = ("norm/w", "norm_w", "A_log", "dt_bias", "/D", "/b", "bias",
+                  "/mean", "/var", "/scale", "bq", "bk", "bv", "b_up", "b_down",
+                  "enc_pos", "dec_pos")
+
+
+def is_quantizable(path: str, arr) -> bool:
+    return arr.ndim >= 2 and not any(path.endswith(s) for s in _SKIP_SUFFIXES)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point (Table II) path
+# ---------------------------------------------------------------------------
+
+def weight_qtype(w, bits: int) -> QType:
+    if bits >= 32:
+        return QType(32, None)
+    return fixed_for_range(bits, float(jnp.max(jnp.abs(w))))
+
+
+def quantize_tree_fixed(params: Dict[str, jax.Array], dt: DatatypeConfig
+                        ) -> Tuple[Dict[str, jax.Array], Dict[str, float]]:
+    """Fake-quantize weights to Wy.  Returns (new params, stats)."""
+    out, zeros, total = {}, 0.0, 0
+    for path, w in params.items():
+        if is_quantizable(path, w) and dt.weight_bits < 32:
+            qt = weight_qtype(w, dt.weight_bits)
+            out[path] = fake_quant(w, qt)
+            n = w.size
+            zeros += float(zero_fraction(w, qt)) * n
+            total += n
+        else:
+            out[path] = w
+    stats = {"zero_weight_frac": zeros / max(total, 1)}
+    return out, stats
+
+
+@dataclass
+class ActQuant:
+    """Runtime activation quantizer for Dx (calibrated per-site)."""
+    bits: int
+    ranges: Dict[str, float]    # site name -> calibrated max |act|
+
+    def __call__(self, name: str, x):
+        if self.bits >= 32:
+            return x
+        qt = fixed_for_range(self.bits, self.ranges.get(name, 8.0))
+        return fake_quant(x, qt)
+
+
+def calibrate_acts(capture_fn: Callable[[], Dict[str, jax.Array]]) -> Dict[str, float]:
+    """capture_fn runs the model on a calibration batch and returns named
+    intermediate activations; we record per-site max |x|."""
+    acts = capture_fn()
+    return {k: float(jnp.max(jnp.abs(v))) for k, v in acts.items()}
+
+
+# ---------------------------------------------------------------------------
+# MXU-native weight-only path (LM serving)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class QuantizedParams:
+    """int8 master codes + per-channel scales; low-bit views derived on read."""
+    codes: Dict[str, jax.Array]      # int8, same shape as the weight
+    scales: Dict[str, jax.Array]     # f32, broadcastable (per out-channel)
+    passthrough: Dict[str, jax.Array]  # unquantized params (norms, embeds opt-out)
+    bits: int = 8                    # active working point (8 / 4 / 2)
+
+    def tree(self):
+        return {"codes": self.codes, "scales": self.scales,
+                "passthrough": self.passthrough}
+
+
+def _channel_scale(w):
+    """Symmetric per-output-channel scale; channel = last dim."""
+    m = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=tuple(range(w.ndim - 1)),
+                keepdims=True)
+    return jnp.maximum(m, 1e-8) / 127.0
+
+
+def quantize_tree_native(params: Dict[str, jax.Array],
+                         quant_embeddings: bool = False) -> QuantizedParams:
+    codes, scales, passthrough = {}, {}, {}
+    for path, w in params.items():
+        quantize = is_quantizable(path, w)
+        if not quant_embeddings and path.startswith(("embed/", "lm_head/")):
+            quantize = False
+        if quantize:
+            s = _channel_scale(w)
+            codes[path] = jnp.clip(jnp.round(w.astype(jnp.float32) / s),
+                                   -127, 127).astype(jnp.int8)
+            scales[path] = s
+        else:
+            passthrough[path] = w
+    return QuantizedParams(codes, scales, passthrough)
+
+
+def derive_view(code_i8, bits: int):
+    """Nested truncation: int8 master -> effective int-``bits`` codes, still in
+    int8 domain (granularity 2^(8-bits)); shares the master's scale."""
+    if bits >= 8:
+        return code_i8
+    sh = 8 - bits
+    step = 1 << sh
+    q = jnp.clip(jnp.round(code_i8.astype(jnp.float32) / step),
+                 -(2 ** (bits - 1)), 2 ** (bits - 1) - 1)
+    return (q * step).astype(jnp.int8)
+
+
+def dequant(code_i8, scale, bits: int = 8, dtype=jnp.bfloat16):
+    return (derive_view(code_i8, bits).astype(jnp.float32) * scale).astype(dtype)
+
+
+def dequantize_tree(qp: QuantizedParams, bits: Optional[int] = None,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    b = qp.bits if bits is None else bits
+    out = dict(qp.passthrough)
+    for path, c in qp.codes.items():
+        out[path] = dequant(c, qp.scales[path], b, dtype)
+    return out
+
+
+def quant_memory_bytes(qp: QuantizedParams, bits: int, packed: bool = True) -> int:
+    """Weight-storage footprint at a working point (packed sub-byte storage)."""
+    per_val = bits / 8.0 if packed else 1.0
+    n_q = sum(int(np.prod(c.shape)) for c in qp.codes.values())
+    n_s = sum(int(np.prod(s.shape)) * 4 for s in qp.scales.values())
+    n_p = sum(int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize
+              for p in qp.passthrough.values())
+    return int(n_q * per_val) + n_s + n_p

@@ -1,0 +1,94 @@
+"""Quantization types.
+
+Two regimes (DESIGN.md §2):
+
+* **Fixed point** (paper-faithful, Vivado ``ap_fixed`` analogue): ``QType(bits,
+  frac)`` — signed Qm.n with m = bits-frac integer bits.  Used by the Table II
+  reproduction.  Values are *fake-quantized* (held on the exact grid in f32,
+  bit-exact for bits <= 23).
+* **MXU-native storage**: int8 / int4 / int2-in-int8 symmetric per-channel —
+  the at-scale serving path (weight-only quantization).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class QType:
+    bits: int
+    frac: Optional[int] = None   # None => float passthrough
+    signed: bool = True
+
+    @property
+    def is_float(self) -> bool:
+        return self.frac is None
+
+    @property
+    def scale(self) -> float:
+        assert self.frac is not None
+        return 2.0 ** (-self.frac)
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1 if self.signed else 2 ** self.bits - 1
+
+    def __str__(self) -> str:
+        return "float" if self.is_float else f"Q{self.bits - (self.frac or 0)}.{self.frac}"
+
+
+FLOAT = QType(32, None)
+
+
+def fixed_for_range(bits: int, max_abs: float) -> QType:
+    """Pick the Qm.n split so [−max_abs, max_abs] fits (the HLS-writer policy:
+    integer bits to cover the calibrated range, remaining bits fractional).
+
+    Integer bits may be *negative* (ap_fixed allows it): small-magnitude weight
+    tensors (max |w| << 1) then keep every bit as fraction — at W4 this is the
+    difference between the paper's 97 % and a collapsed accuracy."""
+    import math
+    max_abs = max(float(max_abs), 1e-8)
+    int_bits = math.ceil(math.log2(max_abs + 1e-12))   # qmax*scale >= max_abs
+    frac = bits - 1 - int_bits                         # 1 sign bit
+    return QType(bits, frac)
+
+
+@dataclass(frozen=True)
+class DatatypeConfig:
+    """The paper's ``Dx-Wy`` mixed-precision working point."""
+    act_bits: int      # x — activation bits (32 = float)
+    weight_bits: int   # y — weight bits (32 = float)
+
+    @property
+    def name(self) -> str:
+        return f"D{self.act_bits}-W{self.weight_bits}"
+
+
+# Table II exploration points
+TABLE2_POINTS = (
+    DatatypeConfig(32, 32),
+    DatatypeConfig(16, 16),
+    DatatypeConfig(8, 16),
+    DatatypeConfig(16, 8),
+    DatatypeConfig(16, 4),
+    DatatypeConfig(16, 2),
+)
+
+
+def storage_dtype(bits: int):
+    """MXU-native storage dtype for a weight bit-width."""
+    if bits >= 16:
+        return jnp.bfloat16
+    if bits > 4:
+        return jnp.int8
+    if bits > 2:
+        return jnp.int4
+    return jnp.int8  # int2 packed 4-per-byte elsewhere; unpacked sim in int8

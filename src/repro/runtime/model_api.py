@@ -1,0 +1,63 @@
+"""Family dispatch: one API over decoder-only / enc-dec / vlm models.
+
+``batch`` dicts:
+  LM:        {tokens (B,S), labels (B,S)}
+  audio:     {tokens, labels, frames (B, enc_seq, d)}
+  vlm:       {tokens, labels, patches (B, n_patches, d)}
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+from repro.models.common import cross_entropy
+
+
+def forward_logits(params, batch: Dict, cfg: ModelConfig, *,
+                   mesh: Optional[Mesh] = None, tp_total: int = 1,
+                   remat: bool = False, unroll: bool = False):
+    if cfg.family == "audio":
+        return encdec.forward(params, batch["tokens"], batch["frames"], cfg,
+                              mesh=mesh, tp_total=tp_total, remat=remat,
+                              unroll=unroll)
+    return transformer.forward(params, batch["tokens"], cfg, mesh=mesh,
+                               tp_total=tp_total, remat=remat,
+                               patch_embeds=batch.get("patches"),
+                               unroll=unroll)
+
+
+def loss_fn(params, batch: Dict, cfg: ModelConfig, *,
+            mesh: Optional[Mesh] = None, tp_total: int = 1,
+            remat: bool = False, unroll: bool = False,
+            lb_coef: float = 0.01, z_coef: float = 1e-3
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward_logits(params, batch, cfg, mesh=mesh,
+                                 tp_total=tp_total, remat=remat, unroll=unroll)
+    labels = batch["labels"]
+    ce = cross_entropy(logits, labels, cfg.vocab)
+    loss = ce + lb_coef * aux["lb_loss"] + z_coef * aux["z_loss"]
+    metrics = {"loss": loss, "ce": ce, **aux}
+    return loss, metrics
+
+
+def init_decode_state(params, batch: Dict, cfg: ModelConfig, batch_size: int,
+                      seq_len: int, dtype=jnp.bfloat16):
+    if cfg.family == "audio":
+        return encdec.init_decode_state(params, batch["frames"], cfg,
+                                        batch_size, seq_len, dtype)
+    return transformer.init_decode_state(cfg, batch_size, seq_len, dtype)
+
+
+def decode_step(params, tokens, state, cfg: ModelConfig, *,
+                mesh: Optional[Mesh] = None, tp_total: int = 1,
+                unroll: bool = False):
+    if cfg.family == "audio":
+        return encdec.decode_step(params, tokens, state, cfg, mesh=mesh,
+                                  tp_total=tp_total, unroll=unroll)
+    return transformer.decode_step(params, tokens, state, cfg, mesh=mesh,
+                                   tp_total=tp_total, unroll=unroll)

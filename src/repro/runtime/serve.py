@@ -1,0 +1,151 @@
+"""Serving runtime: prefill/decode steps + the adaptive mixed-precision server.
+
+The adaptive server is the paper's CPS story at pod scale (DESIGN.md §7): one
+int8 master weight buffer, per-request-batch working-point selection driven by
+an energy/SLA policy — switching precision costs no weight reload.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.adaptive import RuntimePolicy, WorkingPoint
+from repro.models import encdec, transformer
+from repro.quant.ptq import QuantizedParams, dequantize_tree, quantize_tree_native
+from repro.runtime import model_api
+from repro.sharding import batch_axes
+
+
+def decode_state_shardings(cfg: ModelConfig, state, mesh: Mesh):
+    """Shardings for a DecodeState / EncDecDecodeState (flat kv dims)."""
+    dp = batch_axes(mesh)
+    tp = mesh.shape["model"]
+
+    def spec_for(path, x):
+        if x is None:
+            return None
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        # (L, B, ..., feat): batch over dp; last dim over model when divisible
+        parts = [None] * x.ndim
+        parts[1] = dp
+        if x.shape[-1] % tp == 0 and x.shape[-1] >= tp:
+            parts[-1] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    if isinstance(state, transformer.DecodeState):
+        return transformer.DecodeState(
+            cache_k=spec_for("k", state.cache_k),
+            cache_v=spec_for("v", state.cache_v),
+            ssm_ssd=(None if state.ssm_ssd is None else NamedSharding(
+                mesh, P(None, dp, "model", None))),
+            ssm_conv=(None if state.ssm_conv is None else NamedSharding(
+                mesh, P(None, dp, None, None))),
+            index=NamedSharding(mesh, P()))
+    return encdec.EncDecDecodeState(
+        cache_k=spec_for("k", state.cache_k),
+        cache_v=spec_for("v", state.cache_v),
+        cross_k=NamedSharding(mesh, P(None, dp, None, None, None)),
+        cross_v=NamedSharding(mesh, P(None, dp, None, None, None)),
+        index=NamedSharding(mesh, P()))
+
+
+def make_prefill_step(cfg: ModelConfig, *, mesh: Optional[Mesh] = None,
+                      tp_total: int = 1):
+    def prefill(params, batch):
+        logits, aux = model_api.forward_logits(params, batch, cfg, mesh=mesh,
+                                               tp_total=tp_total)
+        return logits
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, *, mesh: Optional[Mesh] = None,
+                     tp_total: int = 1):
+    def step(params, tokens, state):
+        return model_api.decode_step(params, tokens, state, cfg, mesh=mesh,
+                                     tp_total=tp_total)
+
+    return step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt, max_new: int,
+                    seq_len: int, batch_extras: Optional[Dict] = None):
+    """Host-loop greedy decoding (examples / integration tests)."""
+    B, S0 = prompt.shape
+    batch = {"tokens": prompt, **(batch_extras or {})}
+    state = model_api.init_decode_state(params, batch, cfg, B, seq_len)
+    step = jax.jit(lambda p, t, s: model_api.decode_step(p, t, s, cfg))
+    # feed the prompt token by token (cache warmup), then generate
+    out = [prompt]
+    tok = prompt[:, :1]
+    for i in range(S0):
+        logits, state = step(params, prompt[:, i:i + 1], state)
+    tok = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1)
+    for _ in range(max_new):
+        out.append(tok)
+        logits, state = step(params, tok, state)
+        tok = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1)
+    return jnp.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive mixed-precision LM server
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServeMetrics:
+    point: str
+    weight_bytes_read: int
+    est_step_energy_uj: float
+
+
+class AdaptiveLMServer:
+    """Batched decode serving with runtime-switchable weight precision.
+
+    One int8 master + scales (shared substrate); each working point is a
+    compiled decode step reading the same buffers — switching is picking a
+    different executable (CG-reconfiguration analogue, no weight movement).
+    """
+
+    def __init__(self, params, cfg: ModelConfig,
+                 points: Sequence[WorkingPoint] = (
+                     WorkingPoint("w8", 8), WorkingPoint("w4", 4),
+                     WorkingPoint("w2", 2)),
+                 policy: Optional[RuntimePolicy] = None):
+        self.cfg = cfg
+        self.points = list(points)
+        self.policy = policy or RuntimePolicy(self.points)
+        self.qparams = quantize_tree_native(params)
+        self._steps: Dict[str, Callable] = {}
+
+    def _step_for(self, pt: WorkingPoint) -> Callable:
+        if pt.name not in self._steps:
+            bits = pt.weight_bits
+            cfg = self.cfg
+
+            @jax.jit
+            def step(qtree, tokens, state, _bits=bits):
+                qp = QuantizedParams(qtree["codes"], qtree["scales"],
+                                     qtree["passthrough"])
+                params = dequantize_tree(qp, _bits, jnp.bfloat16)
+                return model_api.decode_step(params, tokens, state, cfg)
+
+            self._steps[pt.name] = step
+        return self._steps[pt.name]
+
+    def decode(self, tokens, state, energy_budget_frac: float = 1.0
+               ) -> Tuple[jax.Array, object, ServeMetrics]:
+        pt = self.policy.select(energy_budget_frac)
+        logits, state = self._step_for(pt)(self.qparams.tree(), tokens, state)
+        nbytes = sum(int(c.size) for c in self.qparams.codes.values())
+        wbytes = nbytes * pt.weight_bits // 8
+        # energy model: pJ/byte HBM + pJ/flop (roofline constants)
+        metrics = ServeMetrics(pt.name, wbytes, wbytes * 2.0e-6)
+        return logits, state, metrics

@@ -1,0 +1,119 @@
+"""Distributed train step factory.
+
+Features (DESIGN.md §7): DP×TP (+pod) sharding, ZeRO-1 optimizer-state
+sharding, remat, gradient accumulation (microbatching), optional int8
+gradient compression with error feedback (AC applied to the DP collective).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.optim.adamw import OptConfig, OptState, apply_updates, init_opt_state
+from repro.quant import gradcomp
+from repro.runtime.model_api import loss_fn
+from repro.sharding import batch_axes, opt_state_spec, param_sharding
+
+
+class TrainState(NamedTuple):
+    params: Dict[str, jax.Array]
+    opt: OptState
+    err_fb: Optional[Dict[str, jax.Array]]  # gradient-compression residuals
+
+
+def init_train_state(params: Dict[str, jax.Array], grad_compress: bool = False
+                     ) -> TrainState:
+    err = gradcomp.init_error_state(params) if grad_compress else None
+    return TrainState(params=params, opt=init_opt_state(params), err_fb=err)
+
+
+def state_shardings(cfg: ModelConfig, state_shape, mesh: Mesh):
+    """NamedShardings for a TrainState (params rule + ZeRO-1 moments)."""
+    p_sh = param_sharding(state_shape.params, mesh)
+    mu_sh = {k: NamedSharding(mesh, opt_state_spec(k, v.shape, mesh))
+             for k, v in state_shape.opt.mu.items()}
+    nu_sh = {k: NamedSharding(mesh, opt_state_spec(k, v.shape, mesh))
+             for k, v in state_shape.opt.nu.items()}
+    err_sh = None
+    if state_shape.err_fb is not None:
+        err_sh = {k: NamedSharding(mesh, opt_state_spec(k, v.shape, mesh))
+                  for k, v in state_shape.err_fb.items()}
+    return TrainState(
+        params=p_sh,
+        opt=OptState(mu=mu_sh, nu=nu_sh, count=NamedSharding(mesh, P())),
+        err_fb=err_sh)
+
+
+def batch_shardings(batch_shape: Dict, mesh: Mesh):
+    dp = batch_axes(mesh)
+    return {k: NamedSharding(mesh, P(dp, *([None] * (v.ndim - 1))))
+            for k, v in batch_shape.items()}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *,
+                    mesh: Optional[Mesh] = None, tp_total: int = 1,
+                    remat: bool = True, grad_compress: bool = False,
+                    microbatches: int = 1, unroll: bool = False):
+    """Returns ``step(state, batch) -> (state, metrics)`` (un-jitted; the
+    caller jits with shardings — see launch/dryrun.py and launch/train.py)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, mesh=mesh, tp_total=tp_total,
+                              remat=remat, unroll=unroll), has_aux=True)(params)
+
+    def step(state: TrainState, batch: Dict[str, jax.Array]
+             ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        if microbatches > 1:
+            mb = {k: v.reshape(microbatches, v.shape[0] // microbatches,
+                               *v.shape[1:]) for k, v in batch.items()}
+
+            def acc_body(acc, mbatch):
+                (loss, metrics), g = grads_of(state.params, mbatch)
+                acc = jax.tree.map(jnp.add, acc,
+                                   jax.tree.map(lambda x: x / microbatches, g))
+                return acc, metrics
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  state.params)
+            grads, metrics = jax.lax.scan(acc_body, zero_g, mb,
+                                          unroll=microbatches if unroll else 1)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = grads_of(state.params, batch)
+
+        err_fb = state.err_fb
+        if grad_compress:
+            grads, err_fb = gradcomp.compress_tree(grads, err_fb)
+
+        params, opt, opt_metrics = apply_updates(state.params, grads,
+                                                 state.opt, opt_cfg)
+        metrics = {**metrics, **opt_metrics}
+        return TrainState(params, opt, err_fb), metrics
+
+    return step
+
+
+def jit_train_step(cfg: ModelConfig, opt_cfg: OptConfig, mesh: Mesh,
+                   state_shape: TrainState, batch_shape: Dict, *,
+                   remat: bool = True, grad_compress: bool = False,
+                   microbatches: int = 1, donate: bool = True):
+    """jit with explicit in/out shardings for the production mesh."""
+    tp_total = mesh.shape["model"]
+    step = make_train_step(cfg, opt_cfg, mesh=mesh, tp_total=tp_total,
+                           remat=remat, grad_compress=grad_compress,
+                           microbatches=microbatches)
+    st_sh = state_shardings(cfg, state_shape, mesh)
+    b_sh = batch_shardings(batch_shape, mesh)
+    metric_sh = None  # let xla choose (scalars)
+    return jax.jit(
+        step,
+        in_shardings=(st_sh, b_sh),
+        out_shardings=(st_sh, metric_sh),
+        donate_argnums=(0,) if donate else (),
+    )

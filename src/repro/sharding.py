@@ -1,0 +1,131 @@
+"""Sharding rules for the production mesh.
+
+Axis conventions (DESIGN.md §4):
+  - ``pod``   : data-parallel replication across pods (multi-pod mesh only)
+  - ``data``  : data parallelism (batch / tokens)
+  - ``model`` : tensor parallelism (flattened head dims, FFN hidden, vocab, experts)
+
+All *explicit* shardings are placed on dims that divide the 16-way axes; head-level
+tensors are constrained only on flattened dims and left to SPMD propagation otherwise.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh):
+    """Axes used for data parallelism (pod axis folded in when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def ns(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def batch_spec(mesh: Mesh, *rest) -> P:
+    """PartitionSpec with the batch dim sharded over all DP axes."""
+    return P(batch_axes(mesh), *rest)
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules.
+#
+# Parameters are stored in a flat dict {path: array}; the rule is selected by
+# path suffix.  Stacked-over-layers params have a leading L dim (never sharded).
+# ---------------------------------------------------------------------------
+
+_RULES = (
+    # (suffix, candidate specs WITHOUT the leading layer-stack dim; first whose
+    #  sharded dims divide the model axis wins)
+    ("embed/table", (P("model", None),)),          # (V, d) vocab-sharded
+    ("lm_head/w", (P(None, "model"),)),            # (d, V)
+    ("attn/wq", (P(None, "model"),)),              # (d, H*Dh)
+    ("attn/wk", (P(None, "model"),)),              # (d, Hkv*Dh)
+    ("attn/wv", (P(None, "model"),)),
+    ("attn/wo", (P("model", None),)),              # (H*Dh, d)
+    ("attn/bq", (P("model"),)),
+    ("attn/bk", (P("model"),)),
+    ("attn/bv", (P("model"),)),
+    ("mlp/w_gate", (P(None, "model"),)),           # (d, f)
+    ("mlp/w_up", (P(None, "model"),)),
+    ("mlp/w_down", (P("model", None),)),           # (f, d)
+    ("moe/w_gate", (P("model", None, None, None),)),  # (tp_total, E/ep, d, f/tp)
+    ("moe/w_up", (P("model", None, None, None),)),
+    ("moe/w_down", (P("model", None, None, None),)),
+    ("moe/router", (P(),)),                        # (d, E) replicated (tiny)
+    ("ssm/w_z", (P(None, "model"),)),              # (d, d_inner)
+    ("ssm/w_x", (P(None, "model"),)),
+    ("ssm/w_bc", (P(None, "model"),)),             # (d, 2GN)
+    ("ssm/w_dt", (P(),)),                          # (d, H) tiny: replicate
+    ("ssm/w_out", (P("model", None),)),            # (d_inner, d)
+    ("ssm/conv", (P(None, "model"),)),             # (K, conv_dim)
+    ("ssm/A_log", (P("model"),)),                  # (H,) if H % 16 == 0
+    ("ssm/D", (P("model"),)),
+    ("ssm/dt_bias", (P("model"),)),
+    ("ssm/norm_w", (P("model"),)),
+    ("cross/wq", (P(None, "model"),)),
+    ("cross/wk", (P(None, "model"),)),
+    ("cross/wv", (P(None, "model"),)),
+    ("cross/wo", (P("model", None),)),
+)
+
+
+def param_spec(path: str, shape: Sequence[int], mesh: Mesh, stacked: bool = True) -> P:
+    """PartitionSpec for parameter ``path`` with given global ``shape``.
+
+    Falls back to replication when no candidate's sharded dim divides the
+    model-axis size (jax rejects uneven explicit shardings).
+    """
+    tp = mesh.shape["model"]
+    for suffix, specs in _RULES:
+        if not path.endswith(suffix):
+            continue
+        for spec in specs:
+            parts = list(spec)
+            lead = 1 if (stacked and len(shape) == len(parts) + 1) else 0
+            parts = [None] * lead + parts
+            if len(parts) != len(shape):
+                continue  # rank mismatch: try next candidate
+            if all(ax != "model" or shape[i] % tp == 0 for i, ax in enumerate(parts)):
+                return P(*parts)
+        return P()  # no candidate fits: replicate (small tensors only)
+    return P()  # norms, biases, scales: replicated
+
+
+def param_sharding(params: dict, mesh: Mesh, stacked: bool = True) -> dict:
+    return {
+        k: NamedSharding(mesh, param_spec(k, v.shape, mesh, stacked=stacked))
+        for k, v in params.items()
+    }
+
+
+def opt_state_spec(path: str, shape: Sequence[int], mesh: Mesh) -> P:
+    """ZeRO-1: moments additionally sharded over ``data`` on the largest
+    even-divisible dim not already sharded by the param rule."""
+    base = param_spec(path, shape, mesh, stacked=True)
+    parts = list(base) + [None] * (len(shape) - len(base))
+    dsz = mesh.shape["data"]
+    # pick the largest dim that is free and divides the data axis
+    cands = [i for i, ax in enumerate(parts) if ax is None and shape[i] % dsz == 0]
+    if cands:
+        i = max(cands, key=lambda i: shape[i])
+        parts[i] = "data"
+    return P(*parts)

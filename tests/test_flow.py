@@ -1,0 +1,100 @@
+"""End-to-end design-flow tests (paper Fig. 1): Reader -> Writers -> adaptive."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.mnist_cnn import CONFIG as CNN
+from repro.core.adaptive import WorkingPoint
+from repro.core.flow import DesignFlow
+from repro.core.reader import cnn_to_ir
+from repro.models import cnn
+from repro.quant.qtypes import DatatypeConfig
+
+
+@pytest.fixture(scope="module")
+def flow_setup():
+    key = jax.random.PRNGKey(0)
+    params = cnn.init_params(CNN, key)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 28, 28, 1))
+    g = cnn_to_ir(CNN, {k: np.asarray(v) for k, v in params.items()}, batch=4)
+    return params, x, DesignFlow(g)
+
+
+def test_float_writer_bit_exact_vs_model(flow_setup):
+    params, x, flow = flow_setup
+    res = flow.run(targets=("jax",), dtconfig=DatatypeConfig(32, 32))
+    ref, _ = cnn.forward(params, x, CNN)
+    np.testing.assert_array_equal(np.asarray(res.executables["jax"](x)),
+                                  np.asarray(ref))
+
+
+def test_stream_writer_equals_jax_writer(flow_setup):
+    _, x, flow = flow_setup
+    res = flow.run(targets=("jax", "stream"), dtconfig=DatatypeConfig(16, 8),
+                   calib_inputs=(x,))
+    np.testing.assert_allclose(np.asarray(res.executables["jax"](x)),
+                               np.asarray(res.executables["stream"](x)),
+                               atol=1e-4)
+
+
+def test_quantized_flow_reports_zero_weights(flow_setup):
+    _, x, flow = flow_setup
+    fracs = {}
+    for wb in (16, 8, 4, 2):
+        res = flow.run(targets=("jax",), dtconfig=DatatypeConfig(16, wb))
+        fracs[wb] = res.stats["zero_weight_frac"]
+    # paper claim C3: zero weights increase as precision drops
+    assert fracs[2] > fracs[4] > fracs[8] >= fracs[16]
+
+
+def test_calibration_captures_every_fifo(flow_setup):
+    _, x, flow = flow_setup
+    ranges = flow.calibrate(x)
+    # one range per tensor in the dataflow (inputs + all node outputs)
+    names = {n.outputs[0] for n in flow.graph.nodes}
+    assert names <= set(ranges)
+
+
+def test_adaptive_accelerator_points_and_sharing(flow_setup):
+    _, x, flow = flow_setup
+    pts = [WorkingPoint("hi", 8), WorkingPoint("lo", 2)]
+    acc = flow.compose_adaptive(pts)
+    y_hi = acc("hi", x)
+    y_lo = acc("lo", x)
+    assert y_hi.shape == y_lo.shape == (4, 10)
+    # lower precision must actually change the computation
+    assert float(jnp.max(jnp.abs(y_hi - y_lo))) > 1e-6
+    rep = acc.sharing_report()
+    assert rep["sharing_ratio"] > 1.0          # merged < sum of separates
+    assert rep["extra_bytes_per_config"] == 0  # derived views are free
+
+
+def test_dynamic_switch_matches_static(flow_setup):
+    _, x, flow = flow_setup
+    pts = [WorkingPoint("hi", 8), WorkingPoint("lo", 4)]
+    acc = flow.compose_adaptive(pts)
+    dyn = acc.build_dynamic()
+    for i, pt in enumerate(pts):
+        y_static = acc(pt.name, x).astype(jnp.float32)
+        y_dyn = dyn(jnp.int32(i), acc.qparams.tree(), x)
+        np.testing.assert_allclose(np.asarray(y_dyn), np.asarray(y_static),
+                                   atol=1e-5)
+
+
+def test_stream_topology_is_mdc_consumable(flow_setup, tmp_path):
+    _, x, flow = flow_setup
+    res = flow.run(targets=("stream",), dtconfig=DatatypeConfig(16, 8))
+    w = res.writers["stream"]
+    topo = w.topology()
+    conv_actors = [a for a in topo["actors"] if a["class"] == "Conv"]
+    assert len(conv_actors) == 2
+    for a in conv_actors:
+        assert a["sub_actors"] == ["LineBuffer", "ConvActor", "WeightActor",
+                                   "BiasActor"]
+        assert a["target"] == "pallas/conv2d_stream"
+    assert all(c["datatype"] == "D16-W8" for c in topo["connections"])
+    w.save_topology(str(tmp_path / "net.xdf.json"))
+    import json
+    with open(tmp_path / "net.xdf.json") as f:
+        assert json.load(f)["network"] == "mnist-cnn"

@@ -1,0 +1,77 @@
+"""Fault tolerance: restart-equals-uninterrupted, straggler watchdog, elastic."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokens import DataConfig
+from repro.models.params import init_params
+from repro.optim.adamw import OptConfig
+from repro.runtime import ft
+from repro.runtime.train import init_train_state, make_train_step
+
+ARCH = "qwen1.5-0.5b"
+
+
+def _setup(steps=12):
+    cfg = get_config(ARCH).smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0), max_seq=32)
+    state = init_train_state(params)
+    step = jax.jit(make_train_step(cfg, OptConfig(lr=1e-3, warmup_steps=1,
+                                                  total_steps=steps)))
+    data = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=7)
+    return cfg, state, step, data
+
+
+def test_restart_bit_identical_to_uninterrupted(tmp_path):
+    steps = 12
+    cfg, state, step, data = _setup(steps)
+    # uninterrupted run
+    r1 = ft.run_training(step, state, data, steps, str(tmp_path / "a"),
+                         ckpt_every=4)
+    # interrupted run: inject failures at steps 5 and 9
+    r2 = ft.run_training(step, state, data, steps, str(tmp_path / "b"),
+                         ckpt_every=4,
+                         injector=ft.FailureInjector(fail_at=[5, 9]))
+    assert r2.restarts == 2
+    from repro.ckpt import checkpoint as ckpt
+    t1, s1, _ = ckpt.restore(str(tmp_path / "a"))
+    t2, s2, _ = ckpt.restore(str(tmp_path / "b"))
+    assert s1 == s2 == steps
+    for k in t1["params"]:
+        np.testing.assert_array_equal(np.asarray(t1["params"][k]),
+                                      np.asarray(t2["params"][k]), err_msg=k)
+
+
+def test_loss_decreases_over_training(tmp_path):
+    steps = 15
+    cfg, state, step, data = _setup(steps)
+    r = ft.run_training(step, state, data, steps, str(tmp_path / "c"),
+                        ckpt_every=50)
+    losses = [m["loss"] for m in r.metrics_log]
+    assert losses[-1] < losses[0], losses
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    wd = ft.StragglerWatchdog(factor=3.0, window=10)
+    for i in range(10):
+        wd.observe(i, 0.1)
+    assert wd.observe(10, 0.5)          # 5x median -> flagged
+    assert not wd.observe(11, 0.12)
+    assert wd.flagged == [10]
+
+
+def test_failure_mid_save_keeps_last_good_checkpoint(tmp_path):
+    """Atomic rename: a .tmp dir never shadows the last good step."""
+    from repro.ckpt import checkpoint as ckpt
+    tree = {"params": {"w": jnp.ones(4)}}
+    ckpt.save(tree, str(tmp_path), 10)
+    # simulate a crashed save: leave a stale tmp dir
+    os.makedirs(str(tmp_path / "step_00000020.tmp"))
+    assert ckpt.latest_step(str(tmp_path)) == 10
+    t, s, _ = ckpt.restore(str(tmp_path))
+    assert s == 10

@@ -1,0 +1,88 @@
+import numpy as np
+import pytest
+
+from repro.core.ir import Graph, Node, TensorInfo
+from repro.core.reader import cnn_to_ir, mlp_to_ir
+from repro.configs.mnist_cnn import CONFIG as CNN
+
+
+def _toy_graph():
+    return Graph(
+        name="toy",
+        nodes=[
+            Node("Gemm", "fc1", ["input", "w1", "b1"], ["h"]),
+            Node("Relu", "r1", ["h"], ["hr"]),
+            Node("Gemm", "fc2", ["hr", "w2", "b2"], ["logits"]),
+        ],
+        inputs=[TensorInfo("input", (1, 4))],
+        outputs=["logits"],
+        initializers={"w1": np.zeros((4, 8), np.float32),
+                      "b1": np.zeros(8, np.float32),
+                      "w2": np.zeros((8, 2), np.float32),
+                      "b2": np.zeros(2, np.float32)},
+    )
+
+
+def test_validate_and_topo():
+    g = _toy_graph()
+    g.validate()
+    order = [n.name for n in g.topo_order()]
+    assert order.index("fc1") < order.index("r1") < order.index("fc2")
+
+
+def test_topo_handles_shuffled_nodes():
+    g = _toy_graph()
+    g.nodes = g.nodes[::-1]
+    order = [n.name for n in g.topo_order()]
+    assert order.index("fc1") < order.index("fc2")
+
+
+def test_undefined_input_rejected():
+    g = _toy_graph()
+    g.nodes[0].inputs[0] = "missing"
+    with pytest.raises(ValueError):
+        g.validate()
+
+
+def test_cycle_rejected():
+    g = _toy_graph()
+    # make fc1 depend on the output of fc2
+    g.nodes[0].inputs[0] = "logits"
+    with pytest.raises(ValueError):
+        g.topo_order()
+
+
+def test_unsupported_op_rejected():
+    with pytest.raises(ValueError):
+        Node("FancyOp", "x", [], [])
+
+
+def test_json_roundtrip(tmp_path):
+    g = _toy_graph()
+    path = str(tmp_path / "g.json")
+    g.save(path)
+    g2 = Graph.load(path)
+    assert [n.name for n in g2.nodes] == [n.name for n in g.nodes]
+    assert g2.initializers["w1"].shape == (4, 8)
+    np.testing.assert_array_equal(g2.initializers["w1"], g.initializers["w1"])
+
+
+def test_cnn_to_ir_matches_paper_topology():
+    """Paper: 2 conv blocks (conv, maxpool, batchnorm, relu) + 1 FC."""
+    from repro.models import cnn
+    import jax
+    params = cnn.init_params(CNN, jax.random.PRNGKey(0))
+    g = cnn_to_ir(CNN, {k: np.asarray(v) for k, v in params.items()})
+    ops = [n.op for n in g.topo_order()]
+    assert ops == ["Conv", "MaxPool", "BatchNormalization", "Relu"] * 2 + \
+        ["Flatten", "Gemm"]
+
+
+def test_mlp_to_ir():
+    sizes = [16, 8, 4]
+    params = {f"fc{i}/w": np.zeros((sizes[i], sizes[i + 1]), np.float32)
+              for i in range(2)}
+    params.update({f"fc{i}/b": np.zeros(sizes[i + 1], np.float32)
+                   for i in range(2)})
+    g = mlp_to_ir(sizes, params)
+    assert [n.op for n in g.topo_order()] == ["Gemm", "Relu", "Gemm"]

@@ -1,0 +1,126 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.qmatmul.ops import qmatmul, qmatmul_int8_act
+from repro.kernels.qmatmul.ref import qmatmul_ref, qmatmul_int8_act_ref
+from repro.kernels.conv2d_stream.ops import conv2d_stream
+from repro.kernels.conv2d_stream.ref import conv2d_ref
+from repro.kernels.ssd_scan.ops import ssd_chunked_kernel
+from repro.models.ssm import ssd_chunked
+
+
+def _quantize(w):
+    s = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8) / 127.0
+    codes = jnp.clip(jnp.round(w / s), -127, 127).astype(jnp.int8)
+    return codes, s
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 512, 384),
+                                   (128, 1024, 256), (384, 256, 128)])
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_qmatmul_shapes_bits(M, K, N, bits):
+    kx = jax.random.PRNGKey(M * K + N + bits)
+    x = jax.random.normal(kx, (M, K), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    codes, s = _quantize(w)
+    y_k = qmatmul(x, codes, s, bits=bits).astype(jnp.float32)
+    y_r = qmatmul_ref(x, codes, s, bits).astype(jnp.float32)
+    # bf16 output: <= 1 ulp of the largest magnitude
+    tol = float(jnp.max(jnp.abs(y_r))) * 2 ** -7
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_qmatmul_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 256), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 128), jnp.float32)
+    codes, s = _quantize(w)
+    y = qmatmul(x, codes, s, bits=8)
+    assert y.dtype == dtype and y.shape == (128, 128)
+
+
+def test_qmatmul_batched_and_ragged():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 100), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (100, 50), jnp.float32)
+    codes, s = _quantize(w)
+    y = qmatmul(x, codes, s, bits=8)
+    assert y.shape == (2, 3, 50)
+    y_r = qmatmul_ref(x.reshape(6, 100), codes, s, 8).reshape(2, 3, 50)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_r, np.float32), atol=1.0)
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_qmatmul_int8_act_bitexact(bits):
+    """Integer path accumulates in int32 — must be bit-exact vs the oracle."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (128, 256), jnp.float32)
+    xs = jnp.max(jnp.abs(x), axis=1) / 127.0
+    xc = jnp.clip(jnp.round(x / xs[:, None]), -127, 127).astype(jnp.int8)
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 128), jnp.float32)
+    codes, s = _quantize(w)
+    y_k = qmatmul_int8_act(xc, xs, codes, s, bits=bits)
+    y_r = qmatmul_int8_act_ref(xc, xs, codes, s, bits)
+    np.testing.assert_array_equal(np.asarray(y_k, np.float32),
+                                  np.asarray(y_r, np.float32))
+
+
+@pytest.mark.parametrize("B,H,W,Cin,Cout,k", [
+    (2, 28, 28, 1, 16, 3), (1, 14, 14, 16, 32, 3), (3, 8, 8, 4, 8, 5),
+    (2, 7, 7, 32, 16, 3), (1, 28, 28, 3, 8, 1)])
+def test_conv2d_stream_shapes(B, H, W, Cin, Cout, k):
+    x = jax.random.normal(jax.random.PRNGKey(B + H), (B, H, W, Cin), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, k, Cin, Cout)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(2), (Cout,)) * 0.1
+    np.testing.assert_allclose(np.asarray(conv2d_stream(x, w, b)),
+                               np.asarray(conv2d_ref(x, w, b)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_conv2d_stream_matches_model_conv():
+    """The stream kernel must match the CNN model's conv (same layer semantics)."""
+    from repro.models.cnn import conv2d
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 28, 28, 1))
+    w = jax.random.normal(jax.random.PRNGKey(6), (3, 3, 1, 16)) * 0.3
+    b = jnp.zeros(16)
+    np.testing.assert_allclose(np.asarray(conv2d_stream(x, w, b)),
+                               np.asarray(conv2d(x, w, b)), atol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,Q", [
+    (2, 128, 4, 16, 2, 8, 32), (1, 64, 2, 8, 1, 16, 16),
+    (2, 96, 6, 32, 3, 4, 32), (1, 256, 8, 64, 1, 128, 64)])
+def test_ssd_kernel_vs_oracle(B, S, H, P, G, N, Q):
+    ks = jax.random.split(jax.random.PRNGKey(S + H), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    C = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    D = jax.random.normal(ks[5], (H,))
+    y_r, s_r = ssd_chunked(x, dt, A, Bm, C, D, Q)
+    y_k, s_k = ssd_chunked_kernel(x, dt, A, Bm, C, D, Q)
+    scale = float(jnp.max(jnp.abs(y_r))) + 1e-6
+    np.testing.assert_allclose(np.asarray(y_k) / scale, np.asarray(y_r) / scale,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=1e-4)
+
+
+def test_ssd_decode_matches_chunked_prefix():
+    from repro.models.ssm import ssd_decode_step
+    B, S, H, P, G, N, Q = 2, 64, 4, 16, 1, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    C = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    D = jax.random.normal(ks[5], (H,))
+    y_ref, _ = ssd_chunked(x, dt, A, Bm, C, D, Q)
+    st = jnp.zeros((B, H, P, N))
+    for t in range(S):
+        y_t, st = ssd_decode_step(x[:, t], dt[:, t], A, Bm[:, t], C[:, t], D, st)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_ref[:, -1]),
+                               atol=1e-4)

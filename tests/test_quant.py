@@ -1,0 +1,115 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quant.fixedpoint import dequantize, fake_quant, quantize, zero_fraction
+from repro.quant.pack import pack_int2, pack_int4, unpack_int2, unpack_int4
+from repro.quant.ptq import (derive_view, dequant, dequantize_tree,
+                             quantize_tree_fixed, quantize_tree_native,
+                             quant_memory_bytes)
+from repro.quant.qtypes import (QType, DatatypeConfig, TABLE2_POINTS,
+                                fixed_for_range)
+
+
+def test_qtype_basics():
+    qt = QType(8, 4)
+    assert qt.scale == 2 ** -4
+    assert qt.qmin == -128 and qt.qmax == 127
+    assert str(qt) == "Q4.4"
+
+
+def test_fixed_for_range_covers():
+    qt = fixed_for_range(16, 3.7)
+    x = jnp.array([3.7, -3.7, 0.0])
+    deq = dequantize(quantize(x, qt), qt)
+    assert float(jnp.max(jnp.abs(deq - x))) < 2 * qt.scale
+
+
+def test_quantize_saturates():
+    qt = QType(4, 0)  # [-8, 7]
+    assert float(quantize(jnp.array(100.0), qt)) == 7
+    assert float(quantize(jnp.array(-100.0), qt)) == -8
+
+
+def test_fake_quant_idempotent():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,))
+    qt = QType(8, 5)
+    y = fake_quant(x, qt)
+    np.testing.assert_array_equal(np.asarray(fake_quant(y, qt)), np.asarray(y))
+
+
+def test_fake_quant_straight_through_grad():
+    qt = QType(8, 4)
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, qt)))(jnp.ones(4))
+    np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+def test_zero_fraction_increases_with_lower_bits():
+    w = jax.random.normal(jax.random.PRNGKey(1), (1000,)) * 0.1
+    fracs = []
+    for bits in (16, 8, 4, 2):
+        qt = fixed_for_range(bits, float(jnp.max(jnp.abs(w))))
+        fracs.append(float(zero_fraction(w, qt)))
+    assert fracs == sorted(fracs), f"zero fraction must rise as bits drop: {fracs}"
+
+
+def test_pack_int4_roundtrip():
+    codes = jnp.arange(-8, 8, dtype=jnp.int8).reshape(2, 8)
+    packed = pack_int4(codes)
+    assert packed.shape == (2, 4)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(packed)),
+                                  np.asarray(codes))
+
+
+def test_pack_int2_roundtrip():
+    codes = jnp.array([[-2, -1, 0, 1] * 2], dtype=jnp.int8)
+    packed = pack_int2(codes)
+    assert packed.shape == (1, 2)
+    np.testing.assert_array_equal(np.asarray(unpack_int2(packed)),
+                                  np.asarray(codes))
+
+
+def test_derive_view_nested():
+    """W4/W2 views of the int8 master stay on coarser grids of the same scale."""
+    codes = jnp.arange(-127, 128, dtype=jnp.int8)
+    v4 = derive_view(codes, 4)
+    v2 = derive_view(codes, 2)
+    assert set(np.asarray(v4).tolist()) <= set(range(-128, 128, 16))
+    assert set(np.asarray(v2).tolist()) <= set(range(-128, 128, 64))
+    # w8 view is the identity
+    np.testing.assert_array_equal(np.asarray(derive_view(codes, 8)),
+                                  np.asarray(codes))
+
+
+def test_native_quant_error_bounds():
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 32))
+    params = {"layer/w_up": w}
+    qp = quantize_tree_native(params)
+    for bits, tol in ((8, 2 / 127), (4, 2 / 7), (2, 2.1)):
+        deq = dequantize_tree(qp, bits, jnp.float32)["layer/w_up"]
+        err = float(jnp.max(jnp.abs(deq - w)))
+        scale = float(jnp.max(jnp.abs(w)))
+        assert err <= tol * scale, (bits, err, tol * scale)
+
+
+def test_quantize_tree_fixed_table2_points():
+    params = {"a/w_up": jax.random.normal(jax.random.PRNGKey(3), (32, 16)),
+              "a/norm/w": jnp.ones(16)}
+    for dt in TABLE2_POINTS:
+        q, stats = quantize_tree_fixed(params, dt)
+        assert q["a/norm/w"].shape == (16,)          # norms untouched
+        assert 0.0 <= stats["zero_weight_frac"] <= 1.0
+        if dt.weight_bits >= 32:
+            np.testing.assert_array_equal(np.asarray(q["a/w_up"]),
+                                          np.asarray(params["a/w_up"]))
+
+
+def test_quant_memory_bytes_packed_scaling():
+    params = {"l/w_up": jnp.ones((128, 128), jnp.float32)}
+    qp = quantize_tree_native(params)
+    b8 = quant_memory_bytes(qp, 8)
+    b4 = quant_memory_bytes(qp, 4)
+    b2 = quant_memory_bytes(qp, 2)
+    n = 128 * 128
+    assert b8 - b4 == n // 2 and b4 - b2 == n // 4

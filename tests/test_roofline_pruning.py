@@ -1,0 +1,79 @@
+"""Roofline-parser and pruning unit tests."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.roofline import (CollectiveStats, RooflineReport,
+                                   model_flops_for, parse_collectives)
+from repro.quant.pruning import magnitude_prune, nm_prune, prune_tree
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ar = f32[16,1024]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%add
+  %ag = bf16[4096,512]{1,0} all-gather(%p0), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = bf16[256,512]{1,0} reduce-scatter(%x), channel_id=3, replica_groups=[2,8]<=[16], to_apply=%add
+  %cp = u8[128]{0} collective-permute(%y), channel_id=4, source_target_pairs={{0,1}}
+  %no = f32[2,2]{1,0} add(%a, %b)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    st = parse_collectives(HLO_SAMPLE)
+    assert st.counts == {"all-reduce": 1, "all-gather": 1,
+                         "reduce-scatter": 1, "collective-permute": 1}
+    ar = 2 * 15 / 16 * 16 * 1024 * 4
+    ag = 15 / 16 * 4096 * 512 * 2
+    rs = 7 * 256 * 512 * 2
+    cp = 128
+    np.testing.assert_allclose(st.wire_bytes, ar + ag + rs + cp, rtol=1e-6)
+
+
+def test_parse_tuple_shapes():
+    txt = ('%t = (f32[8,8]{1,0}, f32[4]{0}) all-reduce(%a, %b), '
+           'replica_groups=[4,64]<=[256], to_apply=%add')
+    st = parse_collectives(txt)
+    assert st.counts["all-reduce"] == 1
+    np.testing.assert_allclose(st.raw_bytes, 8 * 8 * 4 + 4 * 4)
+
+
+def test_roofline_bound_selection():
+    coll = CollectiveStats(counts={}, bytes_by_op={}, wire_bytes=5e9,
+                           raw_bytes=5e9)
+    r = RooflineReport("a", "s", "16x16", 256, flops_per_device=1e12,
+                       bytes_per_device=1e9, collective=coll, model_flops=1e15)
+    assert r.collective_s > r.memory_s and r.collective_s > r.compute_s
+    assert r.bound == "collective"
+    assert 0 < r.mfu < 1
+
+
+def test_model_flops_kinds():
+    from repro.configs import get_config
+    from repro.configs.base import TRAIN_4K, PREFILL_32K, DECODE_32K
+    cfg = get_config("qwen1.5-0.5b")
+    n = cfg.active_param_count()
+    assert model_flops_for(cfg, TRAIN_4K, n) == 6 * n * 256 * 4096
+    assert model_flops_for(cfg, PREFILL_32K, n) == 2 * n * 32 * 32768
+    assert model_flops_for(cfg, DECODE_32K, n) == 2 * n * 128
+
+
+def test_magnitude_prune_fraction():
+    w = jnp.arange(1.0, 101.0)
+    p = magnitude_prune(w, 0.25)
+    assert float(jnp.mean((p == 0))) == 0.25
+    # keeps the largest magnitudes
+    assert float(p[-1]) == 100.0 and float(p[0]) == 0.0
+
+
+def test_nm_prune_structure():
+    w = jnp.array([[1.0, -5.0, 0.1, 3.0, 2.0, -0.2, 4.0, 0.3]])
+    p = nm_prune(w, n=2, m=4)
+    assert float(jnp.mean((p == 0))) == 0.5
+    # each group of 4 keeps exactly its 2 largest |values|
+    np.testing.assert_array_equal(np.asarray(p[0, :4] != 0), [False, True, False, True])
+
+
+def test_prune_tree_skips_norms():
+    tree = {"a/w_up": jnp.ones((8, 8)), "a/norm/w": jnp.ones(8)}
+    out, stats = prune_tree(tree, 0.5)
+    np.testing.assert_array_equal(np.asarray(out["a/norm/w"]), 1.0)
+    assert 0.4 <= stats["zero_weight_frac"] <= 0.6

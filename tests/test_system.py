@@ -1,0 +1,87 @@
+"""End-to-end behaviour tests for the paper's system: the full ONNX->accelerator
+flow on a *trained* classifier, validating the paper's Table II claim
+*orderings* (C1-C3) on the procedural MNIST dataset."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.mnist_cnn import CONFIG as CNN
+from repro.core.flow import DesignFlow
+from repro.core.reader import cnn_to_ir
+from repro.data.mnist import make_dataset
+from repro.models import cnn
+from repro.quant.qtypes import DatatypeConfig
+
+
+@pytest.fixture(scope="module")
+def trained_cnn():
+    """Train the paper's CNN briefly on procedural MNIST (CPU, ~1 min)."""
+    imgs, labels = make_dataset(1024, seed=0)
+    test_x, test_y = make_dataset(256, seed=99)
+    params = cnn.init_params(CNN, jax.random.PRNGKey(0))
+
+    @jax.jit
+    def step(params, x, y):
+        (loss, aux), g = jax.value_and_grad(cnn.loss_fn, has_aux=True)(
+            params, x, y, CNN)
+        params = {k: v - 0.05 * g[k] for k, v in params.items()}
+        # update running bn stats
+        for k, v in aux.items():
+            params[k] = 0.9 * params[k] + 0.1 * v
+        return params, loss
+
+    bs = 64
+    for epoch in range(6):
+        for i in range(0, 1024, bs):
+            params, loss = step(params, jnp.asarray(imgs[i:i + bs]),
+                                jnp.asarray(labels[i:i + bs]))
+    acc = float(cnn.accuracy(params, jnp.asarray(test_x),
+                             jnp.asarray(test_y), CNN))
+    return params, acc, (test_x, test_y)
+
+
+def test_cnn_learns_above_chance(trained_cnn):
+    _, acc, _ = trained_cnn
+    assert acc > 0.7, f"trained accuracy {acc}"
+
+
+def _flow_accuracy(params, dt, test):
+    test_x, test_y = test
+    g = cnn_to_ir(CNN, {k: np.asarray(v) for k, v in params.items()},
+                  batch=len(test_y))
+    flow = DesignFlow(g)
+    calib = (jnp.asarray(test_x[:64]),)
+    res = flow.run(targets=("jax",), dtconfig=dt, calib_inputs=calib)
+    logits = res.executables["jax"](jnp.asarray(test_x))
+    acc = float(jnp.mean((jnp.argmax(logits, -1) == jnp.asarray(test_y))))
+    return acc, res.stats
+
+
+def test_paper_claim_c1_weight_precision_robust(trained_cnn):
+    """C1: dropping W16->W8->W4 barely hurts accuracy (paper: 98/98/97)."""
+    params, acc_f, test = trained_cnn
+    accs = {wb: _flow_accuracy(params, DatatypeConfig(16, wb), test)[0]
+            for wb in (16, 8, 4)}
+    for wb, a in accs.items():
+        assert a > acc_f - 0.1, f"W{wb}: {a} vs float {acc_f}"
+
+
+def test_paper_claim_c2_activation_precision_fragile(trained_cnn):
+    """C2: aggressive activation quantization hurts more than weight quant
+    (paper: D8-W16 76% vs D16-W8 98%)."""
+    params, acc_f, test = trained_cnn
+    acc_w8, _ = _flow_accuracy(params, DatatypeConfig(16, 8), test)
+    acc_d4, _ = _flow_accuracy(params, DatatypeConfig(4, 16), test)
+    assert acc_w8 - acc_d4 > 0.05, (acc_w8, acc_d4)
+
+
+def test_paper_claim_c3_zero_weights_grow(trained_cnn):
+    """C3: zero-weight fraction rises steeply at W4/W2 (paper: 55%/86%)."""
+    params, _, test = trained_cnn
+    _, s4 = _flow_accuracy(params, DatatypeConfig(16, 4), test)
+    _, s2 = _flow_accuracy(params, DatatypeConfig(16, 2), test)
+    _, s16 = _flow_accuracy(params, DatatypeConfig(16, 16), test)
+    assert s2["zero_weight_frac"] > s4["zero_weight_frac"] > \
+        s16["zero_weight_frac"]
+    assert s2["zero_weight_frac"] > 0.3
