@@ -4,6 +4,13 @@ Paper columns -> TPU proxies (DESIGN.md §2): LUT/FF/DSP -> MXU FLOPs,
 BRAM -> packed weight bytes, latency/throughput -> measured wall time of the
 streaming executable (relative ordering), power/energy -> roofline energy
 model (pJ/byte HBM + pJ/FLOP).
+
+Beyond the paper's uniform ``Dx-Wy`` grid, the table now includes
+*heterogeneous per-layer* rows (the paper's stated WIP goal — a possibly
+different datatype per layer): two hand-picked ``PrecisionMap`` points and
+one found by the greedy sensitivity explorer (``D16-Wauto``).  Weight bytes
+are computed from the pass-transformed graph, so Conv+BN fusion's removal of
+the BN statistic tensors shows up in the storage column.
 """
 from __future__ import annotations
 
@@ -16,14 +23,24 @@ import numpy as np
 
 from repro.configs.mnist_cnn import CONFIG as CNN
 from repro.core.flow import DesignFlow
+from repro.core.ir import Graph
 from repro.core.reader import cnn_to_ir
 from repro.data.mnist import make_dataset
 from repro.models import cnn
-from repro.quant.qtypes import TABLE2_POINTS, DatatypeConfig
+from repro.quant.qtypes import TABLE2_POINTS, DatatypeConfig, PrecisionMap
 
 # energy model constants (v5e-class, pJ)
 PJ_PER_FLOP = 0.35
 PJ_PER_BYTE = 15.0
+
+# heterogeneous per-layer working points (node names from cnn_to_ir)
+HETERO_POINTS = (
+    # W8 backbone, deeper conv dropped to W4
+    PrecisionMap(DatatypeConfig(16, 8), {"conv1": DatatypeConfig(16, 4)}),
+    # aggressive W4 default, first conv protected at W8, classifier at W2
+    PrecisionMap(DatatypeConfig(16, 4), {"conv0": DatatypeConfig(16, 8),
+                                         "fc": DatatypeConfig(16, 2)}),
+)
 
 
 def train_cnn(n_train=1024, epochs=6, seed=0):
@@ -56,11 +73,14 @@ def model_flops(batch: int) -> int:
     return total * batch
 
 
-def weight_bytes(dt: DatatypeConfig) -> int:
+def weight_bytes(graph: Graph, dt) -> int:
+    """Packed weight storage of the compiled graph under per-layer bits."""
+    from repro.quant.ptq import effective_weight_dt
+    default = dt.default if isinstance(dt, PrecisionMap) else dt
     n = 0
-    params = cnn.init_params(CNN, jax.random.PRNGKey(0))
-    for k, v in params.items():
-        bits = dt.weight_bits if v.ndim >= 2 else 32
+    for name, v in graph.initializers.items():
+        node_dt = effective_weight_dt(graph, name, default)
+        bits = node_dt.weight_bits if v.ndim >= 2 else 32
         n += v.size * bits // 8
     return n
 
@@ -72,8 +92,11 @@ def run(full: bool = True) -> List[Dict]:
     g = cnn_to_ir(CNN, {k: np.asarray(v) for k, v in params.items()},
                   batch=len(test_y))
     flow = DesignFlow(g)
+    points = list(TABLE2_POINTS) + list(HETERO_POINTS)
+    auto_pm, _ = flow.explore_mixed_precision((tx[:64],), tol=0.02)
+    points.append(auto_pm)
     rows = []
-    for dt in TABLE2_POINTS:
+    for dt in points:
         res = flow.run(targets=("stream",), dtconfig=dt, calib_inputs=(tx[:64],))
         exe = jax.jit(res.executables["stream"])
         logits = exe(tx)
@@ -87,11 +110,18 @@ def run(full: bool = True) -> List[Dict]:
             times.append(time.perf_counter() - t0)
         us = min(times) * 1e6 / len(test_y)
         fl = model_flops(1)
-        wb = weight_bytes(dt)
-        act_bytes = 2 * 28 * 28 * 16 * (dt.act_bits / 8)
+        wb = weight_bytes(res.graph, dt)
+        act_bits = dt.default.act_bits if isinstance(dt, PrecisionMap) else dt.act_bits
+        act_bytes = 2 * 28 * 28 * 16 * (act_bits / 8)
         energy_uj = (fl * PJ_PER_FLOP + (wb + act_bytes) * PJ_PER_BYTE) * 1e-6
+        if dt is auto_pm:
+            per = ",".join(f"{k}:{v.weight_bits}"
+                           for k, v in sorted(dt.per_node.items()))
+            label = f"D{act_bits}-Wauto[{per}]"
+        else:
+            label = dt.name
         rows.append({
-            "datatype": dt.name,
+            "datatype": label,
             "zero_weights_pct": round(100 * res.stats.get("zero_weight_frac", 0.0), 1),
             "weight_bytes": wb,
             "accuracy_pct": round(100 * acc, 1),

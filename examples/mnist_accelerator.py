@@ -8,7 +8,9 @@ import argparse
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, _ROOT)                      # for `benchmarks.*`
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 import jax
 import jax.numpy as jnp

@@ -36,13 +36,18 @@ def main():
     graph.save("/tmp/mnist_cnn.onnx.json")
     print(f"IR: {len(graph.nodes)} nodes ->", "/tmp/mnist_cnn.onnx.json")
 
-    # 2. float reference target
+    # 2. float reference target: raw interpretation is bit-exact; the default
+    #    compile pipeline fuses Conv+BN+Relu into FusedConv actors
     flow = DesignFlow(graph)
-    ref = flow.run(targets=("jax",)).executables["jax"]
-    ref_logits = ref(x)
+    raw = flow.run(targets=("jax",), passes=())
     model_logits, _ = cnn.forward(params, x, CNN)
-    print("float target bit-exact vs model:",
-          bool(jnp.all(ref_logits == model_logits)))
+    print("float target (passes=()) bit-exact vs model:",
+          bool(jnp.all(raw.executables["jax"](x) == model_logits)))
+    compiled = flow.run(targets=("jax",))
+    ref_logits = compiled.executables["jax"](x)
+    print("compiled graph:", [n.op for n in compiled.graph.topo_order()],
+          f"| max |delta| vs model = "
+          f"{float(jnp.max(jnp.abs(ref_logits - model_logits))):.2e}")
 
     # 3. D16-W8 streaming accelerator (Pallas line-buffer conv actors)
     res = flow.run(targets=("stream",), dtconfig=DatatypeConfig(16, 8),

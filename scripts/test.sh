@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point — one command locally and in CI.
+#   scripts/test.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

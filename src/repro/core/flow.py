@@ -1,74 +1,124 @@
 """End-to-end DesignFlow driver — the paper's Fig. 1, fully automated.
 
-ONNX-like model  ->  Reader (IR)  ->  per-target Writer  ->  [PTQ exploration]
-->  Multi-Dataflow compose  ->  deployable accelerator + reports.
+ONNX-like model  ->  Reader (IR)  ->  compiler passes (fusion, constant
+folding, DCE, shape inference, per-layer precision)  ->  per-target Writer
+->  [PTQ / mixed-precision exploration]  ->  Multi-Dataflow compose  ->
+deployable accelerator + reports.
+
+``run`` applies the default pass pipeline before handing the graph to the
+writers; ``run(passes=())`` skips all rewrites (raw node-by-node
+interpretation, the pre-refactor behaviour), and ``run(passes=[...])``
+substitutes a custom pipeline.  ``dtconfig`` accepts either a uniform
+:class:`~repro.quant.qtypes.DatatypeConfig` or a heterogeneous
+:class:`~repro.quant.qtypes.PrecisionMap`; ``explore_mixed_precision``
+searches for the latter greedily against the float reference.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.ir import Graph
+from repro.core.passes import (PassManager, default_pipeline,
+                               explore_mixed_precision, strip_precision,
+                               structural_pipeline)
 from repro.core.writers.jax_writer import JaxWriter
 from repro.core.writers.stream_writer import StreamWriter
 from repro.core.writers.dist_writer import DistWriter
 from repro.core.adaptive import AdaptiveAccelerator, WorkingPoint
-from repro.quant.qtypes import DatatypeConfig
-from repro.quant.fixedpoint import zero_fraction
-from repro.quant.ptq import weight_qtype
+from repro.quant.qtypes import DatatypeConfig, PrecisionMap
+from repro.quant.ptq import graph_weight_stats
 
 WRITERS = {"jax": JaxWriter, "stream": StreamWriter, "dist": DistWriter}
+
+Precision = Union[DatatypeConfig, PrecisionMap]
 
 
 @dataclass
 class FlowResult:
-    graph: Graph
+    graph: Graph                      # the pass-transformed graph
     writers: Dict[str, JaxWriter]
     executables: Dict[str, Callable]
     act_ranges: Dict[str, float]
     stats: Dict[str, float] = field(default_factory=dict)
 
 
+def _split_precision(dtconfig: Optional[Precision]
+                     ) -> Tuple[Optional[DatatypeConfig], int, int]:
+    """(writer default config, min act bits, min weight bits)."""
+    if dtconfig is None:
+        return None, 32, 32
+    if isinstance(dtconfig, PrecisionMap):
+        return dtconfig.default, dtconfig.min_act_bits, dtconfig.min_weight_bits
+    return dtconfig, dtconfig.act_bits, dtconfig.weight_bits
+
+
 class DesignFlow:
     """``DesignFlow(graph).run(targets, dtconfig, calib)`` — Fig. 1 automated."""
 
-    def __init__(self, graph: Graph):
+    def __init__(self, graph: Graph,
+                 passes: Optional[Sequence[Callable]] = None):
         graph.validate()
         self.graph = graph
+        self.passes = passes          # None => default pipeline per run()
 
-    def calibrate(self, *calib_inputs) -> Dict[str, float]:
+    # -- compiler ------------------------------------------------------------
+    def transform(self, dtconfig: Optional[Precision] = None,
+                  passes: Optional[Sequence[Callable]] = None) -> Graph:
+        """Apply the pass pipeline; ``passes=()`` returns the raw graph."""
+        if passes is None:
+            passes = self.passes
+        if passes is None:
+            passes = default_pipeline(dtconfig)
+        if not passes:
+            return self.graph
+        return PassManager(passes).run(self.graph)
+
+    def calibrate(self, *calib_inputs, graph: Optional[Graph] = None
+                  ) -> Dict[str, float]:
         """Run the float reference once, record per-FIFO activation ranges."""
-        w = JaxWriter(self.graph)
+        w = JaxWriter(graph if graph is not None else self.graph)
         _, env = w.build(capture=True)(*calib_inputs)
         return {k: float(jnp.max(jnp.abs(v)))
                 for k, v in env.items()
                 if hasattr(v, "dtype") and jnp.issubdtype(v.dtype, jnp.floating)}
 
     def run(self, targets: Sequence[str] = ("jax",),
-            dtconfig: Optional[DatatypeConfig] = None,
-            calib_inputs: Optional[tuple] = None) -> FlowResult:
+            dtconfig: Optional[Precision] = None,
+            calib_inputs: Optional[tuple] = None,
+            passes: Optional[Sequence[Callable]] = None) -> FlowResult:
+        default_dt, min_act, min_wt = _split_precision(dtconfig)
+        g = self.transform(dtconfig, passes)
         act_ranges: Dict[str, float] = {}
-        if calib_inputs is not None and dtconfig and dtconfig.act_bits < 32:
-            act_ranges = self.calibrate(*calib_inputs)
+        if calib_inputs is not None and min_act < 32:
+            # calibrate on the *float* view of the compiled graph — with the
+            # precision annotations stripped — so recorded ranges are true
+            # activation ranges, not values already clipped by quantization
+            act_ranges = self.calibrate(*calib_inputs,
+                                        graph=strip_precision(g))
         writers, exes = {}, {}
         for t in targets:
-            w = WRITERS[t](self.graph, dtconfig, act_ranges)
+            w = WRITERS[t](g, default_dt, act_ranges)
             writers[t] = w
             exes[t] = w.build()
         stats = {}
-        if dtconfig and dtconfig.weight_bits < 32:
-            zeros, total = 0.0, 0
-            for name, arr in self.graph.initializers.items():
-                if arr.ndim >= 2:
-                    qt = weight_qtype(jnp.asarray(arr), dtconfig.weight_bits)
-                    zeros += float(zero_fraction(jnp.asarray(arr), qt)) * arr.size
-                    total += arr.size
-            stats["zero_weight_frac"] = zeros / max(total, 1)
-        return FlowResult(self.graph, writers, exes, act_ranges, stats)
+        if dtconfig is not None and min_wt < 32:
+            stats = graph_weight_stats(g, default_dt)
+        return FlowResult(g, writers, exes, act_ranges, stats)
 
+    # -- mixed-precision exploration ----------------------------------------
+    def explore_mixed_precision(self, calib_inputs: tuple, **kwargs
+                                ) -> Tuple[PrecisionMap, List[Dict]]:
+        """Greedy per-layer weight-precision search against the float
+        reference (see :func:`repro.core.passes.explore_mixed_precision`).
+        The returned PrecisionMap feeds straight back into ``run``."""
+        g = PassManager(structural_pipeline()).run(self.graph)
+        return explore_mixed_precision(g, calib_inputs, **kwargs)
+
+    # -- adaptive / MDC -----------------------------------------------------
     def compose_adaptive(self, points: Sequence[WorkingPoint],
                          target: str = "stream") -> AdaptiveAccelerator:
         """Merge working points over one shared-weight substrate (MDC step)."""

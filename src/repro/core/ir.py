@@ -5,18 +5,38 @@ that describes layers and connections of the ONNX model"; this module is that
 format.  Op semantics follow ONNX operator definitions.  The ``onnx`` package
 is unavailable offline, so serialization is ONNX-shaped JSON (graph topology +
 tensor metadata) with weights in an ``.npz`` sidecar.
+
+The IR carries two kinds of per-graph annotations written by the compiler
+passes in :mod:`repro.core.passes`:
+
+* ``Graph.value_info`` — a ``tensor name -> TensorInfo`` map filled in by the
+  shape-inference pass; every FIFO between actors gets a static shape/dtype.
+* ``Node.dtconfig`` — an optional per-layer :class:`~repro.quant.qtypes.
+  DatatypeConfig` attached by the precision-assignment pass.  Writers fall
+  back to their construction-time default when a node carries no annotation,
+  so un-annotated graphs behave exactly like the old single-global-config
+  flow.
+
+Graphs also maintain O(V+E) structural indices (``producer_index`` /
+``consumer_index``) used by ``topo_order``, the passes, and the writers.
 """
 from __future__ import annotations
 
 import json
+from collections import deque
 from dataclasses import dataclass, field, asdict
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.quant.qtypes import DatatypeConfig
+
 SUPPORTED_OPS = {
     "Conv", "MaxPool", "BatchNormalization", "Relu", "Gemm", "MatMul",
-    "Add", "Flatten", "Softmax", "Reshape", "Identity",
+    "Add", "Flatten", "Softmax", "Reshape", "Identity", "Split",
+    # produced by the fusion pass: Conv with folded BatchNormalization
+    # (+ optional trailing Relu, attrs["relu"]=True)
+    "FusedConv",
 }
 
 
@@ -34,6 +54,9 @@ class Node:
     inputs: List[str]
     outputs: List[str]
     attrs: Dict[str, Any] = field(default_factory=dict)
+    # per-layer precision annotation (written by the precision pass);
+    # None => use the writer's default DatatypeConfig
+    dtconfig: Optional[DatatypeConfig] = None
 
     def __post_init__(self):
         if self.op not in SUPPORTED_OPS:
@@ -47,6 +70,8 @@ class Graph:
     inputs: List[TensorInfo]
     outputs: List[str]
     initializers: Dict[str, np.ndarray] = field(default_factory=dict)
+    # tensor name -> inferred TensorInfo (filled by the shape-inference pass)
+    value_info: Dict[str, TensorInfo] = field(default_factory=dict)
 
     # ---- validation / ordering -------------------------------------------
     def validate(self) -> None:
@@ -65,29 +90,76 @@ class Graph:
             if o not in produced:
                 raise ValueError(f"undefined graph output {o!r}")
 
+    # ---- structural indices (O(V+E), cached per node-list identity) -------
+    def _index_key(self) -> Tuple[int, ...]:
+        return tuple(id(n) for n in self.nodes)
+
+    def producer_index(self) -> Dict[str, Node]:
+        """tensor name -> producing Node, built once in O(V+E)."""
+        cached = self.__dict__.get("_pidx")
+        key = self._index_key()
+        if cached is None or cached[0] != key:
+            idx: Dict[str, Node] = {}
+            for n in self.nodes:
+                for o in n.outputs:
+                    idx[o] = n
+            self.__dict__["_pidx"] = cached = (key, idx)
+        return cached[1]
+
+    def consumer_index(self) -> Dict[str, List[Node]]:
+        """tensor name -> consuming Nodes, built once in O(V+E)."""
+        cached = self.__dict__.get("_cidx")
+        key = self._index_key()
+        if cached is None or cached[0] != key:
+            idx: Dict[str, List[Node]] = {}
+            for n in self.nodes:
+                for i in n.inputs:
+                    idx.setdefault(i, []).append(n)
+            self.__dict__["_cidx"] = cached = (key, idx)
+        return cached[1]
+
     def topo_order(self) -> List[Node]:
+        """Kahn's algorithm over the producer index — O(V+E) (the old
+        implementation re-scanned the remaining-node list per step, O(V^2·E)
+        worst case)."""
         avail = {t.name for t in self.inputs} | set(self.initializers)
-        remaining = list(self.nodes)
+        producers: Dict[str, int] = {}
+        for idx, n in enumerate(self.nodes):
+            for o in n.outputs:
+                producers[o] = idx
+        indeg = [0] * len(self.nodes)
+        adj: Dict[int, List[int]] = {}
+        for idx, n in enumerate(self.nodes):
+            for i in set(n.inputs):
+                if i in avail:
+                    continue
+                p = producers.get(i)
+                indeg[idx] += 1
+                if p is not None and p != idx:
+                    adj.setdefault(p, []).append(idx)
+                # p is None (missing producer) or a self-loop: the edge can
+                # never be satisfied, so the node stays unscheduled and we
+                # report it below.
+        ready = deque(i for i, d in enumerate(indeg) if d == 0)
         order: List[Node] = []
-        while remaining:
-            progressed = False
-            for n in list(remaining):
-                if all(i in avail for i in n.inputs):
-                    order.append(n)
-                    avail.update(n.outputs)
-                    remaining.remove(n)
-                    progressed = True
-            if not progressed:
-                raise ValueError(
-                    f"graph has a cycle or missing producer; stuck at "
-                    f"{[n.name for n in remaining]}")
+        while ready:
+            idx = ready.popleft()
+            order.append(self.nodes[idx])
+            for c in adj.get(idx, ()):
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    ready.append(c)
+        if len(order) != len(self.nodes):
+            stuck = [n.name for i, n in enumerate(self.nodes) if indeg[i] > 0]
+            raise ValueError(
+                f"graph has a cycle or missing producer; stuck at {stuck}")
         return order
 
     def producer_of(self, tensor: str) -> Optional[Node]:
-        for n in self.nodes:
-            if tensor in n.outputs:
-                return n
-        return None
+        return self.producer_index().get(tensor)
+
+    def consumers_of(self, tensor: str) -> List[Node]:
+        return self.consumer_index().get(tensor, [])
 
     # ---- serialization ----------------------------------------------------
     def to_json(self) -> str:
@@ -98,6 +170,8 @@ class Graph:
             "outputs": self.outputs,
             "initializers": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                              for k, v in self.initializers.items()},
+            "value_info": {k: {"shape": list(t.shape), "dtype": t.dtype}
+                           for k, t in self.value_info.items()},
         }
         return json.dumps(d, indent=1)
 
@@ -111,14 +185,23 @@ class Graph:
     def from_json(cls, text: str, weights: Optional[Dict[str, np.ndarray]] = None
                   ) -> "Graph":
         d = json.loads(text)
-        nodes = [Node(**n) for n in d["nodes"]]
+        nodes = []
+        for n in d["nodes"]:
+            n = dict(n)
+            dt = n.pop("dtconfig", None)
+            node = Node(**n)
+            if dt is not None:
+                node.dtconfig = DatatypeConfig(**dt)
+            nodes.append(node)
         inputs = [TensorInfo(t["name"], tuple(t["shape"]), t.get("dtype", "float32"))
                   for t in d["inputs"]]
         inits = dict(weights or {})
         for k, meta in d.get("initializers", {}).items():
             if k not in inits:
                 inits[k] = np.zeros(meta["shape"], dtype=meta["dtype"])
-        g = cls(d["name"], nodes, inputs, d["outputs"], inits)
+        vi = {k: TensorInfo(k, tuple(m["shape"]), m.get("dtype", "float32"))
+              for k, m in d.get("value_info", {}).items()}
+        g = cls(d["name"], nodes, inputs, d["outputs"], inits, vi)
         g.validate()
         return g
 

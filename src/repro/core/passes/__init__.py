@@ -1,0 +1,70 @@
+"""Pass-based graph compiler for the ONNX-like IR.
+
+The Reader produces a raw IR; before any Writer consumes it, a
+:class:`PassManager` runs a sequence of graph-to-graph rewrites:
+
+1. :func:`fuse_conv_bn_relu` — fold Conv+BatchNormalization(+Relu) chains
+   (also across a single interposed MaxPool) into one ``FusedConv`` actor;
+2. :func:`fold_constants` — evaluate all-constant subgraphs at compile time;
+3. :func:`eliminate_dead_nodes` — drop nodes/initializers unreachable from
+   the graph outputs (e.g. the folded BN statistics);
+4. :func:`infer_shapes` — annotate every FIFO tensor with shape/dtype
+   (``Graph.value_info``);
+5. :func:`make_assign_precision` — stamp a per-layer ``Dx-Wy``
+   :class:`~repro.quant.qtypes.DatatypeConfig` onto every node.
+
+``default_pipeline(dtconfig)`` builds exactly that list;
+``DesignFlow.run`` applies it by default, with ``run(passes=())`` restoring
+the raw node-by-node interpretation.  Each pass is a pure function
+``Graph -> Graph`` (annotation passes may fill caches in place); custom
+passes slot into the same pipeline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Sequence
+
+from repro.core.ir import Graph
+from repro.core.passes.cleanup import eliminate_dead_nodes, fold_constants
+from repro.core.passes.fusion import fuse_conv_bn_relu
+from repro.core.passes.precision import (explore_mixed_precision,
+                                         make_assign_precision,
+                                         quantizable_layers, strip_precision)
+from repro.core.passes.shape_infer import infer_shapes
+
+GraphPass = Callable[[Graph], Graph]
+
+
+@dataclass
+class PassManager:
+    """Runs a pass sequence, validating the graph after each rewrite."""
+    passes: Sequence[GraphPass]
+
+    def run(self, graph: Graph) -> Graph:
+        for p in self.passes:
+            out = p(graph)
+            graph = graph if out is None else out
+            graph.validate()
+        return graph
+
+
+def default_pipeline(dtconfig=None) -> List[GraphPass]:
+    """The standard compile pipeline: fuse, fold, sweep, annotate shapes,
+    assign per-layer precision."""
+    return [fuse_conv_bn_relu, fold_constants, eliminate_dead_nodes,
+            infer_shapes, make_assign_precision(dtconfig)]
+
+
+def structural_pipeline() -> List[GraphPass]:
+    """The graph rewrites only (no precision annotation) — what the
+    mixed-precision explorer runs before searching datatypes."""
+    return [fuse_conv_bn_relu, fold_constants, eliminate_dead_nodes,
+            infer_shapes]
+
+
+__all__ = [
+    "GraphPass", "PassManager", "default_pipeline", "structural_pipeline",
+    "infer_shapes", "fuse_conv_bn_relu", "fold_constants",
+    "eliminate_dead_nodes", "make_assign_precision",
+    "explore_mixed_precision", "quantizable_layers", "strip_precision",
+]

@@ -1,0 +1,117 @@
+"""Conv + BatchNormalization (+ Relu) fusion pass.
+
+Folds inference-mode BatchNormalization into the preceding Conv's Weight/Bias
+actors and absorbs a trailing Relu, emitting a single ``FusedConv`` node —
+the standard graph-level optimization for streaming accelerators (one actor,
+one FIFO hop, no BN multiplier in the datapath).
+
+The paper's CNN interleaves a MaxPool between the Conv and the BN
+(``Conv -> MaxPool -> BN -> Relu``).  BN is a per-channel affine
+``z = inv * y + c`` with ``inv = scale / sqrt(var + eps)``; an affine with
+``inv > 0`` commutes with the per-channel max window, so the pass also fuses
+*across* a single interposed MaxPool:
+
+    BN(Pool(Conv(x))) = Pool(inv * Conv(x) + c) = Pool(FusedConv(x))
+    Relu(Pool(y))     = Pool(Relu(y))                    (Relu is monotone)
+
+guarded by an explicit ``inv > 0`` check per channel (negative BN scales fall
+back to the unfused form).  All intermediate FIFOs must have exactly one
+consumer and must not be graph outputs.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.ir import Graph, Node
+
+
+def _single_consumer(graph: Graph, tensor: str) -> Optional[Node]:
+    if tensor in set(graph.outputs):
+        return None
+    cs = graph.consumer_index().get(tensor, [])
+    return cs[0] if len(cs) == 1 else None
+
+
+def fuse_conv_bn_relu(graph: Graph) -> Graph:
+    inits = dict(graph.initializers)
+    drop = set()                      # node names removed by fusion
+    fused: Dict[str, Node] = {}       # conv name -> FusedConv replacement
+    pool_rewire: Dict[str, str] = {}  # pool name -> new output tensor name
+
+    for conv in graph.nodes:
+        if conv.op != "Conv":
+            continue
+        nxt = _single_consumer(graph, conv.outputs[0])
+        pool = None
+        if nxt is not None and nxt.op == "MaxPool":
+            pool = nxt
+            nxt = _single_consumer(graph, pool.outputs[0])
+        if nxt is None or nxt.op != "BatchNormalization":
+            continue
+        bn = nxt
+        stats = [inits.get(i) for i in bn.inputs[1:5]]
+        if any(s is None for s in stats):
+            continue  # BN stats must be compile-time constants
+        scale, bias, mean, var = (np.asarray(s, np.float64) for s in stats)
+        eps = bn.attrs.get("epsilon", 1e-5)
+        inv = scale / np.sqrt(var + eps)
+        if pool is not None and not np.all(inv > 0):
+            continue  # negative BN scale does not commute with MaxPool
+        # the fold rescales W/b in place, so they must be private to this conv
+        # (tied weights would corrupt the sharing node)
+        if any(len(graph.consumers_of(t)) != 1 for t in conv.inputs[1:]):
+            continue
+        relu = _single_consumer(graph, bn.outputs[0])
+        if relu is not None and relu.op != "Relu":
+            relu = None
+        tail = relu if relu is not None else bn
+
+        # fold BN into the Weight/Bias actors (HWIO: out-channel is last dim)
+        wname = conv.inputs[1]
+        w = np.asarray(inits[wname])
+        inits[wname] = (np.asarray(w, np.float64) * inv).astype(w.dtype)
+        shift = bias - mean * inv
+        if len(conv.inputs) > 2:
+            bname = conv.inputs[2]
+            b = np.asarray(inits[bname])
+            inits[bname] = (np.asarray(b, np.float64) * inv + shift
+                            ).astype(b.dtype)
+            fin = list(conv.inputs)
+        else:
+            bname = f"{conv.name}/fused_bias"
+            inits[bname] = shift.astype(w.dtype)
+            fin = list(conv.inputs) + [bname]
+
+        attrs = dict(conv.attrs)
+        attrs["relu"] = relu is not None
+        attrs["fused_from"] = [x.name for x in (bn, relu) if x is not None]
+        if pool is None:
+            outs = [tail.outputs[0]]
+        else:
+            outs = [conv.outputs[0]]
+            pool_rewire[pool.name] = tail.outputs[0]
+        fused[conv.name] = Node("FusedConv", conv.name, fin, outs, attrs,
+                                dtconfig=conv.dtconfig)
+        drop.add(bn.name)
+        if relu is not None:
+            drop.add(relu.name)
+
+    if not fused:
+        return graph
+
+    new_nodes = []
+    for n in graph.nodes:
+        if n.name in drop:
+            continue
+        if n.name in fused:
+            new_nodes.append(fused[n.name])
+        elif n.name in pool_rewire:
+            new_nodes.append(replace(n, outputs=[pool_rewire[n.name]]))
+        else:
+            new_nodes.append(n)
+    g = Graph(graph.name, new_nodes, graph.inputs, graph.outputs, inits)
+    g.validate()
+    return g

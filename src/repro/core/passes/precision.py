@@ -1,0 +1,126 @@
+"""Per-layer precision assignment + greedy mixed-precision exploration.
+
+The paper's WIP goal is combining the toolchain with approximate computing —
+"picking a (possibly different) datatype per layer".  Two pieces:
+
+* :func:`make_assign_precision` — a pass that stamps a
+  :class:`~repro.quant.qtypes.DatatypeConfig` onto every node
+  (``Node.dtconfig``) from a :class:`~repro.quant.qtypes.PrecisionMap`
+  (default point + per-node overrides).  Writers then quantize each actor's
+  Weight/Bias actors and output FIFOs independently.
+* :func:`explore_mixed_precision` — a greedy sensitivity-based explorer: all
+  weight-carrying layers start at the highest rung of the bit ladder; each
+  step tentatively lowers one layer by one rung, keeps the move that best
+  preserves top-1 agreement with the float reference, and stops when no move
+  stays within the tolerance.  The result is a heterogeneous PrecisionMap
+  (NN2CAM-style multi-precision per-layer mapping).
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.ir import Graph, Node
+from repro.quant.qtypes import DatatypeConfig, PrecisionMap
+
+# ops with weight initializers worth exploring per-layer
+WEIGHT_OPS = ("Conv", "FusedConv", "Gemm", "MatMul")
+
+
+def _as_map(dt) -> Optional[PrecisionMap]:
+    if dt is None:
+        return None
+    if isinstance(dt, PrecisionMap):
+        return dt
+    return PrecisionMap(dt)
+
+
+def make_assign_precision(dtconfig) -> Callable[[Graph], Graph]:
+    """Pass factory: annotate every node with its per-layer datatype.
+    ``dtconfig`` is a DatatypeConfig (uniform) or PrecisionMap
+    (heterogeneous); ``None`` leaves the graph untouched."""
+    pm = _as_map(dtconfig)
+
+    def assign_precision(graph: Graph) -> Graph:
+        if pm is None:
+            return graph
+        nodes = [replace(n, dtconfig=pm.for_node(n.name)) for n in graph.nodes]
+        return Graph(graph.name, nodes, graph.inputs, graph.outputs,
+                     graph.initializers, graph.value_info)
+
+    return assign_precision
+
+
+def strip_precision(graph: Graph) -> Graph:
+    """Drop every per-node precision annotation (the float view of an
+    annotated graph — calibration must run on this, not on the quantized
+    network)."""
+    if all(n.dtconfig is None for n in graph.nodes):
+        return graph
+    nodes = [replace(n, dtconfig=None) for n in graph.nodes]
+    return Graph(graph.name, nodes, graph.inputs, graph.outputs,
+                 graph.initializers, graph.value_info)
+
+
+def quantizable_layers(graph: Graph) -> List[Node]:
+    inits = graph.initializers
+    return [n for n in graph.topo_order()
+            if n.op in WEIGHT_OPS
+            and any(i in inits and inits[i].ndim >= 2 for i in n.inputs)]
+
+
+def _agreement(logits, ref) -> float:
+    return float(jnp.mean((jnp.argmax(logits, -1) == jnp.argmax(ref, -1))
+                          .astype(jnp.float32)))
+
+
+def explore_mixed_precision(
+        graph: Graph, calib_inputs: Tuple, *,
+        act_bits: int = 16,
+        ladder: Sequence[int] = (16, 8, 4, 2),
+        tol: float = 0.02,
+) -> Tuple[PrecisionMap, List[Dict]]:
+    """Greedy per-layer weight-precision descent on a (pass-transformed)
+    graph.  Returns ``(PrecisionMap, history)`` where history records each
+    accepted move with its top-1 agreement vs. the float reference."""
+    from repro.core.writers.jax_writer import JaxWriter
+
+    ref_writer = JaxWriter(graph)                 # float reference
+    ref_logits, env = ref_writer.build(capture=True)(*calib_inputs)
+    act_ranges = {k: float(jnp.max(jnp.abs(v))) for k, v in env.items()
+                  if hasattr(v, "dtype") and jnp.issubdtype(v.dtype, jnp.floating)}
+
+    layers = [n.name for n in quantizable_layers(graph)]
+    bits = {name: ladder[0] for name in layers}
+    ladder = list(ladder)
+
+    def evaluate(candidate: Dict[str, int]) -> float:
+        pm = PrecisionMap(DatatypeConfig(act_bits, ladder[0]),
+                          {n: DatatypeConfig(act_bits, b)
+                           for n, b in candidate.items()})
+        g = make_assign_precision(pm)(graph)
+        w = JaxWriter(g, pm.default, act_ranges)
+        return _agreement(w.build()(*calib_inputs), ref_logits)
+
+    history: List[Dict] = []
+    while True:
+        best = None
+        for name in layers:
+            rung = ladder.index(bits[name])
+            if rung + 1 >= len(ladder):
+                continue
+            trial = dict(bits)
+            trial[name] = ladder[rung + 1]
+            agree = evaluate(trial)
+            if agree >= 1.0 - tol and (best is None or agree > best[1]):
+                best = (name, agree, trial)
+        if best is None:
+            break
+        name, agree, bits = best
+        history.append({"layer": name, "weight_bits": bits[name],
+                        "agreement": agree})
+    pm = PrecisionMap(DatatypeConfig(act_bits, ladder[0]),
+                      {n: DatatypeConfig(act_bits, b) for n, b in bits.items()})
+    return pm, history

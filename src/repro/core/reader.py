@@ -4,6 +4,10 @@ Sources supported:
   * ONNX-shaped JSON (+ npz weights)              — ``read_json`` / ``read_file``
   * the paper's CNN (repro.models.cnn params)     — ``cnn_to_ir``
   * a generic MLP description                     — ``mlp_to_ir``
+
+Every reader runs the shape-inference pass on the graph it produces, so a
+freshly read IR already carries ``value_info`` annotations for downstream
+passes and writers (further rewrites re-infer as part of the pipeline).
 """
 from __future__ import annotations
 
@@ -13,14 +17,15 @@ import numpy as np
 
 from repro.configs.mnist_cnn import CNNConfig
 from repro.core.ir import Graph, Node, TensorInfo
+from repro.core.passes.shape_infer import infer_shapes
 
 
 def read_json(text: str, weights: Optional[Dict[str, np.ndarray]] = None) -> Graph:
-    return Graph.from_json(text, weights)
+    return infer_shapes(Graph.from_json(text, weights))
 
 
 def read_file(path: str) -> Graph:
-    return Graph.load(path)
+    return infer_shapes(Graph.load(path))
 
 
 def cnn_to_ir(cfg: CNNConfig, params: Dict[str, np.ndarray],
@@ -66,7 +71,7 @@ def cnn_to_ir(cfg: CNNConfig, params: Dict[str, np.ndarray],
         initializers=inits,
     )
     g.validate()
-    return g
+    return infer_shapes(g)
 
 
 def mlp_to_ir(layer_sizes, params: Dict[str, np.ndarray], batch: int = 1,
@@ -86,4 +91,4 @@ def mlp_to_ir(layer_sizes, params: Dict[str, np.ndarray], batch: int = 1,
     g = Graph(name, nodes, [TensorInfo("input", (batch, layer_sizes[0]))],
               ["logits"], inits)
     g.validate()
-    return g
+    return infer_shapes(g)

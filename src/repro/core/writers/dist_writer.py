@@ -3,16 +3,20 @@
 The co-processor-generator analogue: wraps the accelerator for the production
 mesh (batch data-parallel; weights replicated — edge-CNN weights are tiny) and
 returns the compiled artifact plus its cost/memory analysis for the roofline.
+
+Registers nothing in the op registry: every actor runs the reference ("jax")
+implementation and only the partitioning changes.  When the shape-inference
+pass has annotated the graph, output shardings replicate the trailing dims
+explicitly instead of relying on rank inference.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.ir import Graph
 from repro.core.writers.jax_writer import JaxWriter
 from repro.sharding import batch_axes
 
@@ -20,13 +24,19 @@ from repro.sharding import batch_axes
 class DistWriter(JaxWriter):
     target = "dist"
 
+    def _out_spec(self, dp) -> P:
+        info = self.graph.value_info.get(self.graph.outputs[0])
+        if info is not None:
+            return P(dp, *([None] * (len(info.shape) - 1)))
+        return P(dp)
+
     def build_distributed(self, mesh: Mesh) -> Callable:
         run = self.build()
         dp = batch_axes(mesh)
         in_sh = tuple(NamedSharding(mesh, P(dp, *([None] * (len(t.shape) - 1))))
                       for t in self.graph.inputs)
         return jax.jit(run, in_shardings=in_sh,
-                       out_shardings=NamedSharding(mesh, P(dp)))
+                       out_shardings=NamedSharding(mesh, self._out_spec(dp)))
 
     def lower_compile(self, mesh: Mesh, batch: Optional[int] = None):
         fn = self.build_distributed(mesh)

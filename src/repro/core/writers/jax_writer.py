@@ -4,6 +4,18 @@ Faithful to the paper's HLS flow semantics: weights are fake-quantized to Wy
 at build time; the activation stream is quantized to Dx at every actor
 boundary (the fixed-point dataflow between streaming blocks).  ``capture=True``
 returns every intermediate tensor (used for PTQ calibration).
+
+Post pass-pipeline refactor the writer is a thin interpreter over the
+annotated IR:
+
+* actor implementations come from the target-keyed op registry
+  (:mod:`repro.core.writers.registry`) instead of a hardcoded dict — a
+  subclass only sets ``target`` and registers the ops it retargets;
+* precision is per layer: a node annotated with ``Node.dtconfig`` (written by
+  the precision-assignment pass) quantizes its weights and output FIFOs with
+  its own ``Dx-Wy`` point, falling back to the writer's default config;
+* every node output is bound into the environment (multi-output ops such as
+  ``Split`` work; previously only ``outputs[0]`` was bound).
 """
 from __future__ import annotations
 
@@ -13,85 +25,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ir import Graph, Node
+from repro.core.writers.registry import OP_REGISTRY, registered_ops, resolve
 from repro.quant.fixedpoint import fake_quant
 from repro.quant.qtypes import DatatypeConfig, QType, fixed_for_range
-from repro.quant.ptq import weight_qtype
+from repro.quant.ptq import effective_weight_dt, weight_qtype
 
-
-def _op_conv(node: Node, env):
-    x, w, b = (env[i] for i in node.inputs)
-    pads = node.attrs.get("pads", "SAME")
-    strides = tuple(node.attrs.get("strides", (1, 1)))
-    y = jax.lax.conv_general_dilated(
-        x, w, window_strides=strides, padding=pads,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return y + b
-
-
-def _op_maxpool(node: Node, env):
-    x = env[node.inputs[0]]
-    k = tuple(node.attrs["kernel_shape"])
-    s = tuple(node.attrs.get("strides", k))
-    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                 (1, *k, 1), (1, *s, 1), "VALID")
-
-
-def _op_batchnorm(node: Node, env):
-    x, scale, bias, mean, var = (env[i] for i in node.inputs)
-    eps = node.attrs.get("epsilon", 1e-5)
-    inv = scale * jax.lax.rsqrt(var + eps)
-    return x * inv + (bias - mean * inv)
-
-
-def _op_relu(node: Node, env):
-    return jax.nn.relu(env[node.inputs[0]])
-
-
-def _op_gemm(node: Node, env):
-    x, w = env[node.inputs[0]], env[node.inputs[1]]
-    y = x @ w
-    if len(node.inputs) > 2:
-        y = y + env[node.inputs[2]]
-    return y
-
-
-def _op_matmul(node: Node, env):
-    return env[node.inputs[0]] @ env[node.inputs[1]]
-
-
-def _op_add(node: Node, env):
-    return env[node.inputs[0]] + env[node.inputs[1]]
-
-
-def _op_flatten(node: Node, env):
-    x = env[node.inputs[0]]
-    return x.reshape(x.shape[0], -1)
-
-
-def _op_reshape(node: Node, env):
-    return env[node.inputs[0]].reshape(node.attrs["shape"])
-
-
-def _op_softmax(node: Node, env):
-    return jax.nn.softmax(env[node.inputs[0]], axis=-1)
-
-
-def _op_identity(node: Node, env):
-    return env[node.inputs[0]]
-
-
-OP_IMPLS: Dict[str, Callable] = {
-    "Conv": _op_conv, "MaxPool": _op_maxpool, "BatchNormalization": _op_batchnorm,
-    "Relu": _op_relu, "Gemm": _op_gemm, "MatMul": _op_matmul, "Add": _op_add,
-    "Flatten": _op_flatten, "Reshape": _op_reshape, "Softmax": _op_softmax,
-    "Identity": _op_identity,
-}
+# Backward-compatible alias: the reference op table (live view of the "jax"
+# registry entries).
+OP_IMPLS: Dict[str, Callable] = OP_REGISTRY["jax"]
 
 
 class JaxWriter:
-    """Builds an executable from the IR.  Subclasses override ``op_impl`` to
-    retarget individual actors (StreamWriter swaps Conv for the Pallas
-    line-buffer kernel)."""
+    """Builds an executable from the (pass-annotated) IR.  Subclasses set
+    ``target`` and register retargeted actors in the op registry (StreamWriter
+    swaps Conv/FusedConv for the Pallas line-buffer kernel)."""
 
     target = "jax"
 
@@ -104,38 +51,55 @@ class JaxWriter:
         self.act_ranges = act_ranges or {}
         self.weights = self._prepare_weights()
 
+    # -- per-layer precision -------------------------------------------------
+    def node_dt(self, node: Optional[Node]) -> DatatypeConfig:
+        if node is not None and node.dtconfig is not None:
+            return node.dtconfig
+        return self.dt
+
     # -- weights (the Weight/Bias actors) ----------------------------------
     def _prepare_weights(self) -> Dict[str, jax.Array]:
+        """Fake-quantize each initializer at its *consumer's* weight
+        precision (per-layer Wy); 1-D tensors (biases, norm stats) pass
+        through in float."""
         out = {}
         for name, w in self.graph.initializers.items():
             w = jnp.asarray(w)
-            if self.dt.weight_bits < 32 and w.ndim >= 2:
-                out[name] = fake_quant(w, weight_qtype(w, self.dt.weight_bits))
+            dt = effective_weight_dt(self.graph, name, self.dt)
+            if dt.weight_bits < 32 and w.ndim >= 2:
+                out[name] = fake_quant(w, weight_qtype(w, dt.weight_bits))
             else:
                 out[name] = w
         return out
 
     def op_impl(self, op: str) -> Callable:
-        return OP_IMPLS[op]
+        return resolve(op, self.target)
 
-    def _act_q(self, name: str, x):
-        if self.dt.act_bits >= 32 or not jnp.issubdtype(x.dtype, jnp.floating):
+    def op_table(self) -> Dict[str, Callable]:
+        return registered_ops(self.target)
+
+    def _act_q(self, name: str, x, node: Optional[Node] = None):
+        bits = self.node_dt(node).act_bits
+        if bits >= 32 or not jnp.issubdtype(x.dtype, jnp.floating):
             return x
-        qt = fixed_for_range(self.dt.act_bits, self.act_ranges.get(name, 8.0))
+        qt = fixed_for_range(bits, self.act_ranges.get(name, 8.0))
         return fake_quant(x, qt)
 
     # -- build --------------------------------------------------------------
     def build(self, capture: bool = False) -> Callable:
         order = self.graph.topo_order()
         in_names = [t.name for t in self.graph.inputs]
+        impls = [(node, self.op_impl(node.op)) for node in order]
 
         def run(*inputs):
             env: Dict[str, Any] = dict(self.weights)
             for n, x in zip(in_names, inputs):
                 env[n] = self._act_q(n, x)
-            for node in order:
-                y = self.op_impl(node.op)(node, env)
-                env[node.outputs[0]] = self._act_q(node.outputs[0], y)
+            for node, impl in impls:
+                y = impl(node, env)
+                outs = y if isinstance(y, tuple) else (y,)
+                for oname, oval in zip(node.outputs, outs):
+                    env[oname] = self._act_q(oname, oval, node)
             outs = tuple(env[o] for o in self.graph.outputs)
             if capture:
                 return outs[0] if len(outs) == 1 else outs, env

@@ -1,0 +1,144 @@
+"""Target-keyed op registry shared by every writer.
+
+The writers used to hold hardcoded ``{op: impl}`` dicts; after the pass-based
+compiler refactor they all resolve actor implementations here instead.  An
+implementation is registered for an ``(op, target)`` pair; lookup falls back
+to the ``"jax"`` reference target, so a writer only registers the ops it
+actually retargets (StreamWriter: Conv/FusedConv onto the Pallas line-buffer
+kernel; DistWriter: nothing — it inherits the reference impls and changes the
+partitioning instead).
+
+An impl has signature ``impl(node, env) -> tensor | tuple[tensor, ...]`` where
+``env`` maps tensor names to values.  Multi-output ops return a tuple aligned
+with ``node.outputs``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ir import Node
+
+OP_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+
+def register_op(op: str, target: str = "jax"):
+    def deco(fn: Callable) -> Callable:
+        OP_REGISTRY.setdefault(target, {})[op] = fn
+        return fn
+    return deco
+
+
+def resolve(op: str, target: str = "jax") -> Callable:
+    impl = OP_REGISTRY.get(target, {}).get(op)
+    if impl is None:
+        impl = OP_REGISTRY.get("jax", {}).get(op)
+    if impl is None:
+        raise KeyError(f"no implementation for op {op!r} (target {target!r})")
+    return impl
+
+
+def registered_ops(target: str = "jax") -> Dict[str, Callable]:
+    """Effective op table for a target (jax fallbacks merged in)."""
+    table = dict(OP_REGISTRY.get("jax", {}))
+    if target != "jax":
+        table.update(OP_REGISTRY.get(target, {}))
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Reference ("jax") implementations
+# ---------------------------------------------------------------------------
+
+@register_op("Conv")
+def _op_conv(node: Node, env):
+    x, w = env[node.inputs[0]], env[node.inputs[1]]
+    pads = node.attrs.get("pads", "SAME")
+    strides = tuple(node.attrs.get("strides", (1, 1)))
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=strides, padding=pads,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if len(node.inputs) > 2:
+        y = y + env[node.inputs[2]]
+    return y
+
+
+@register_op("FusedConv")
+def _op_fused_conv(node: Node, env):
+    """Conv with BatchNormalization folded into W/b by the fusion pass;
+    attrs["relu"] applies the folded trailing activation."""
+    y = _op_conv(node, env)
+    if node.attrs.get("relu"):
+        y = jax.nn.relu(y)
+    return y
+
+
+@register_op("MaxPool")
+def _op_maxpool(node: Node, env):
+    x = env[node.inputs[0]]
+    k = tuple(node.attrs["kernel_shape"])
+    s = tuple(node.attrs.get("strides", k))
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, *k, 1), (1, *s, 1), "VALID")
+
+
+@register_op("BatchNormalization")
+def _op_batchnorm(node: Node, env):
+    x, scale, bias, mean, var = (env[i] for i in node.inputs)
+    eps = node.attrs.get("epsilon", 1e-5)
+    inv = scale * jax.lax.rsqrt(var + eps)
+    return x * inv + (bias - mean * inv)
+
+
+@register_op("Relu")
+def _op_relu(node: Node, env):
+    return jax.nn.relu(env[node.inputs[0]])
+
+
+@register_op("Gemm")
+def _op_gemm(node: Node, env):
+    x, w = env[node.inputs[0]], env[node.inputs[1]]
+    y = x @ w
+    if len(node.inputs) > 2:
+        y = y + env[node.inputs[2]]
+    return y
+
+
+@register_op("MatMul")
+def _op_matmul(node: Node, env):
+    return env[node.inputs[0]] @ env[node.inputs[1]]
+
+
+@register_op("Add")
+def _op_add(node: Node, env):
+    return env[node.inputs[0]] + env[node.inputs[1]]
+
+
+@register_op("Flatten")
+def _op_flatten(node: Node, env):
+    x = env[node.inputs[0]]
+    return x.reshape(x.shape[0], -1)
+
+
+@register_op("Reshape")
+def _op_reshape(node: Node, env):
+    return env[node.inputs[0]].reshape(node.attrs["shape"])
+
+
+@register_op("Softmax")
+def _op_softmax(node: Node, env):
+    return jax.nn.softmax(env[node.inputs[0]], axis=-1)
+
+
+@register_op("Identity")
+def _op_identity(node: Node, env):
+    return env[node.inputs[0]]
+
+
+@register_op("Split")
+def _op_split(node: Node, env):
+    x = env[node.inputs[0]]
+    axis = node.attrs.get("axis", -1)
+    return tuple(jnp.split(x, len(node.outputs), axis=axis))

@@ -1,58 +1,80 @@
 """Writer 2: IR -> streaming actor pipeline (the HLS-Writer analogue).
 
-Retargets Conv nodes onto the Pallas line-buffer kernel (Fig. 2 template:
-Line Buffer + Conv actor + VMEM-resident Weight/Bias actors) and emits an
-XDF-style topology description — the artifact the Multi-Dataflow Composer
-consumes (``topology()``; compare the paper's XDF/CAL files).
+Retargets Conv / FusedConv nodes onto the Pallas line-buffer kernel (Fig. 2
+template: Line Buffer + Conv actor + VMEM-resident Weight/Bias actors; the
+fusion pass additionally folds BatchNormalization into the Weight/Bias actors
+and appends a ReluActor) and emits an XDF-style topology description — the
+artifact the Multi-Dataflow Composer consumes (``topology()``; compare the
+paper's XDF/CAL files).  Each FIFO in the topology is labelled with the
+*consumer actor's* per-layer ``Dx-Wy`` datatype, so a heterogeneous precision
+assignment is visible in the emitted network description.
 """
 from __future__ import annotations
 
 import json
-from typing import Callable, Dict
+from typing import Dict
 
-from repro.core.ir import Graph, Node
-from repro.core.writers.jax_writer import JaxWriter, OP_IMPLS
+import jax
+
+from repro.core.ir import Node
+from repro.core.writers.jax_writer import JaxWriter
+from repro.core.writers.registry import register_op
 
 
+@register_op("Conv", target="stream")
 def _op_conv_stream(node: Node, env):
     from repro.kernels.conv2d_stream.ops import conv2d_stream
     x, w, b = (env[i] for i in node.inputs)
     return conv2d_stream(x, w, b)
 
 
+@register_op("FusedConv", target="stream")
+def _op_fused_conv_stream(node: Node, env):
+    y = _op_conv_stream(node, env)
+    if node.attrs.get("relu"):
+        y = jax.nn.relu(y)
+    return y
+
+
+_CONV_OPS = ("Conv", "FusedConv")
+
+
 class StreamWriter(JaxWriter):
     target = "stream"
-
-    def op_impl(self, op: str) -> Callable:
-        if op == "Conv":
-            return _op_conv_stream
-        return OP_IMPLS[op]
 
     # ---- dataflow topology (XDF analogue) ---------------------------------
     def topology(self) -> Dict:
         """Actors + FIFO connections of the streaming accelerator."""
+        order = self.graph.topo_order()
+        producers = self.graph.producer_index()
+        input_names = {t.name for t in self.graph.inputs}
         actors = []
-        for n in self.graph.topo_order():
-            actor = {"name": n.name, "class": n.op, "target": (
-                "pallas/conv2d_stream" if n.op == "Conv" else "jax")}
-            if n.op == "Conv":
+        for n in order:
+            is_conv = n.op in _CONV_OPS
+            actor = {"name": n.name, "class": n.op,
+                     "target": "pallas/conv2d_stream" if is_conv else "jax"}
+            if is_conv:
                 w = self.graph.initializers[n.inputs[1]]
-                actor["sub_actors"] = ["LineBuffer", "ConvActor", "WeightActor",
-                                       "BiasActor"]
+                sub = ["LineBuffer", "ConvActor", "WeightActor", "BiasActor"]
+                if n.attrs.get("relu"):
+                    sub.append("ReluActor")
+                actor["sub_actors"] = sub
                 actor["weight_shape"] = list(w.shape)
+                if n.op == "FusedConv":
+                    actor["fused"] = n.attrs.get("fused_from", [])
             actors.append(actor)
         conns = []
-        producers = {}
-        for t in self.graph.inputs:
-            producers[t.name] = "input"
-        for n in self.graph.topo_order():
+        for n in order:
+            dt = self.node_dt(n)
             for i in n.inputs:
                 if i in producers:
-                    conns.append({"src": producers[i], "dst": n.name,
-                                  "fifo": i,
-                                  "datatype": f"D{self.dt.act_bits}-W{self.dt.weight_bits}"})
-            for o in n.outputs:
-                producers[o] = n.name
+                    src = producers[i].name
+                elif i in input_names:
+                    src = "input"
+                else:
+                    continue  # weight/bias initializers are not FIFOs
+                conns.append({"src": src, "dst": n.name, "fifo": i,
+                              "datatype": f"D{dt.act_bits}-W{dt.weight_bits}"})
         return {"network": self.graph.name, "actors": actors,
                 "connections": conns}
 

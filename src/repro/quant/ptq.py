@@ -43,6 +43,36 @@ def weight_qtype(w, bits: int) -> QType:
     return fixed_for_range(bits, float(jnp.max(jnp.abs(w))))
 
 
+def effective_weight_dt(graph, init_name: str,
+                        default_dt: Optional[DatatypeConfig] = None
+                        ) -> Optional[DatatypeConfig]:
+    """The per-layer datatype governing an initializer: its (first) consumer
+    node's ``Node.dtconfig``, falling back to ``default_dt``.  Single source
+    of truth for the writers, the stats, and the storage model."""
+    users = graph.consumer_index().get(init_name, [])
+    if users and users[0].dtconfig is not None:
+        return users[0].dtconfig
+    return default_dt
+
+
+def graph_weight_stats(graph, default_dt: Optional[DatatypeConfig] = None
+                       ) -> Dict[str, float]:
+    """Zero-weight fraction of an IR graph under *per-layer* precision: each
+    initializer is quantized at its consumer node's ``Node.dtconfig`` weight
+    bits (falling back to ``default_dt``).  This is the Table II
+    "Zero weights" column generalized to heterogeneous assignments."""
+    zeros, total = 0.0, 0
+    for name, arr in graph.initializers.items():
+        if arr.ndim < 2:
+            continue
+        dt = effective_weight_dt(graph, name, default_dt)
+        w = jnp.asarray(arr)
+        qt = weight_qtype(w, dt.weight_bits if dt else 32)
+        zeros += float(zero_fraction(w, qt)) * arr.size
+        total += arr.size
+    return {"zero_weight_frac": zeros / max(total, 1)}
+
+
 def quantize_tree_fixed(params: Dict[str, jax.Array], dt: DatatypeConfig
                         ) -> Tuple[Dict[str, jax.Array], Dict[str, float]]:
     """Fake-quantize weights to Wy.  Returns (new params, stats)."""

@@ -11,8 +11,8 @@ Two regimes (DESIGN.md §2):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field as dataclasses_field
+from typing import Mapping, Optional
 
 import jax.numpy as jnp
 
@@ -70,6 +70,37 @@ class DatatypeConfig:
     @property
     def name(self) -> str:
         return f"D{self.act_bits}-W{self.weight_bits}"
+
+
+@dataclass(frozen=True)
+class PrecisionMap:
+    """Per-layer precision: a default ``Dx-Wy`` point plus node-name
+    overrides.  This is the heterogeneous generalization of the paper's single
+    global ``DatatypeConfig`` — the precision-assignment pass stamps
+    ``for_node(name)`` onto every IR node, and the writers quantize each
+    actor's weights/FIFO independently."""
+    default: DatatypeConfig
+    per_node: "Mapping[str, DatatypeConfig]" = dataclasses_field(default_factory=dict)
+
+    def for_node(self, name: str) -> DatatypeConfig:
+        return self.per_node.get(name, self.default)
+
+    @property
+    def min_act_bits(self) -> int:
+        return min([self.default.act_bits] +
+                   [c.act_bits for c in self.per_node.values()])
+
+    @property
+    def min_weight_bits(self) -> int:
+        return min([self.default.weight_bits] +
+                   [c.weight_bits for c in self.per_node.values()])
+
+    @property
+    def name(self) -> str:
+        if not self.per_node:
+            return self.default.name
+        ov = ",".join(f"{n}:{c.name}" for n, c in sorted(self.per_node.items()))
+        return f"{self.default.name}[{ov}]"
 
 
 # Table II exploration points

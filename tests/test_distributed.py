@@ -38,8 +38,8 @@ def test_sharded_train_step_matches_single_device():
         # single device
         s1, m1 = jax.jit(make_train_step(cfg, opt))(state, batch)
         # sharded 2x4
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 4), ("data", "model"))
         step = make_train_step(cfg, opt, mesh=mesh, tp_total=4)
         st_sh = state_shardings(cfg, state, mesh)
         b_sh = batch_shardings(batch, mesh)
@@ -99,8 +99,8 @@ def test_moe_shard_map_matches_local():
                             w_up=p1["layers/moe/w_up"][0],
                             w_down=p1["layers/moe/w_down"][0])
         y1, lb1, z1 = moe_block(x, lp, cfg, None, 1)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 4), ("data", "model"))
         lp4 = MoELayerParams(router=p1["layers/moe/router"][0],
                              w_gate=to_ep(p1["layers/moe/w_gate"], False)[0],
                              w_up=to_ep(p1["layers/moe/w_up"], False)[0],

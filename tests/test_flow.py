@@ -22,11 +22,18 @@ def flow_setup():
 
 
 def test_float_writer_bit_exact_vs_model(flow_setup):
+    """With the pass pipeline disabled the interpretation is bit-exact; the
+    default (fused) pipeline reassociates the BN affine into the conv weights
+    and must agree within fp32 tolerance."""
     params, x, flow = flow_setup
-    res = flow.run(targets=("jax",), dtconfig=DatatypeConfig(32, 32))
     ref, _ = cnn.forward(params, x, CNN)
-    np.testing.assert_array_equal(np.asarray(res.executables["jax"](x)),
+    raw = flow.run(targets=("jax",), dtconfig=DatatypeConfig(32, 32), passes=())
+    np.testing.assert_array_equal(np.asarray(raw.executables["jax"](x)),
                                   np.asarray(ref))
+    fused = flow.run(targets=("jax",), dtconfig=DatatypeConfig(32, 32))
+    assert any(n.op == "FusedConv" for n in fused.graph.nodes)
+    np.testing.assert_allclose(np.asarray(fused.executables["jax"](x)),
+                               np.asarray(ref), atol=1e-5)
 
 
 def test_stream_writer_equals_jax_writer(flow_setup):
@@ -87,14 +94,34 @@ def test_stream_topology_is_mdc_consumable(flow_setup, tmp_path):
     res = flow.run(targets=("stream",), dtconfig=DatatypeConfig(16, 8))
     w = res.writers["stream"]
     topo = w.topology()
-    conv_actors = [a for a in topo["actors"] if a["class"] == "Conv"]
+    conv_actors = [a for a in topo["actors"] if a["class"] == "FusedConv"]
     assert len(conv_actors) == 2
     for a in conv_actors:
         assert a["sub_actors"] == ["LineBuffer", "ConvActor", "WeightActor",
-                                   "BiasActor"]
+                                   "BiasActor", "ReluActor"]
         assert a["target"] == "pallas/conv2d_stream"
+        assert a["fused"]  # records the folded BN/Relu node names
     assert all(c["datatype"] == "D16-W8" for c in topo["connections"])
     w.save_topology(str(tmp_path / "net.xdf.json"))
     import json
     with open(tmp_path / "net.xdf.json") as f:
         assert json.load(f)["network"] == "mnist-cnn"
+
+
+def test_per_layer_precision_map_changes_output(flow_setup):
+    """A heterogeneous PrecisionMap must differ from its uniform default and
+    report per-layer zero-weight stats."""
+    from repro.quant.qtypes import PrecisionMap
+    _, x, flow = flow_setup
+    uni = flow.run(targets=("jax",), dtconfig=DatatypeConfig(16, 8),
+                   calib_inputs=(x,))
+    pm = PrecisionMap(DatatypeConfig(16, 8), {"conv1": DatatypeConfig(16, 2)})
+    het = flow.run(targets=("jax",), dtconfig=pm, calib_inputs=(x,))
+    y_uni = np.asarray(uni.executables["jax"](x))
+    y_het = np.asarray(het.executables["jax"](x))
+    assert np.max(np.abs(y_uni - y_het)) > 1e-6
+    assert het.stats["zero_weight_frac"] > uni.stats["zero_weight_frac"]
+    # the annotation landed on the fused node
+    names = {n.name: n for n in het.graph.nodes}
+    assert names["conv1"].dtconfig == DatatypeConfig(16, 2)
+    assert names["fc"].dtconfig == DatatypeConfig(16, 8)

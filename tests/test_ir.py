@@ -67,6 +67,39 @@ def test_json_roundtrip(tmp_path):
     np.testing.assert_array_equal(g2.initializers["w1"], g.initializers["w1"])
 
 
+def test_producer_consumer_index():
+    g = _toy_graph()
+    assert g.producer_of("h").name == "fc1"
+    assert g.producer_of("input") is None
+    assert [n.name for n in g.consumers_of("hr")] == ["fc2"]
+    # cached index tracks node-list edits
+    g.nodes = g.nodes[:-1]
+    assert g.producer_of("logits") is None
+
+
+def test_topo_order_handles_long_chain():
+    """Kahn ordering stays correct (and fast) on a deep chain."""
+    nodes = []
+    prev = "input"
+    for i in range(500):
+        nodes.append(Node("Relu", f"r{i}", [prev], [f"t{i}"]))
+        prev = f"t{i}"
+    g = Graph("deep", nodes[::-1], [TensorInfo("input", (1, 4))], [prev])
+    order = [n.name for n in g.topo_order()]
+    assert order == [f"r{i}" for i in range(500)]
+
+
+def test_roundtrip_preserves_pass_annotations(tmp_path):
+    from repro.core.passes import infer_shapes, make_assign_precision
+    from repro.quant.qtypes import DatatypeConfig
+    g = make_assign_precision(DatatypeConfig(16, 8))(infer_shapes(_toy_graph()))
+    path = str(tmp_path / "g.json")
+    g.save(path)
+    g2 = Graph.load(path)
+    assert g2.nodes[0].dtconfig == DatatypeConfig(16, 8)
+    assert tuple(g2.value_info["logits"].shape) == (1, 2)
+
+
 def test_cnn_to_ir_matches_paper_topology():
     """Paper: 2 conv blocks (conv, maxpool, batchnorm, relu) + 1 FC."""
     from repro.models import cnn
