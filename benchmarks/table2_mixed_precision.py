@@ -10,7 +10,12 @@ Beyond the paper's uniform ``Dx-Wy`` grid, the table now includes
 different datatype per layer): two hand-picked ``PrecisionMap`` points and
 one found by the greedy sensitivity explorer (``D16-Wauto``).  Weight bytes
 are computed from the pass-transformed graph, so Conv+BN fusion's removal of
-the BN statistic tensors shows up in the storage column.
+the BN statistic tensors shows up in the storage column, and each row also
+reports ``fifo_bytes`` — the aggregate streaming-buffer memory of the sized
+topology (``StreamWriter.topology()['total_fifo_bytes']``), the BRAM-column
+analogue.  The graph is compiled once with a *symbolic* batch dim and served
+through the batch-polymorphic executable, so the same artifact handles the
+calibration and evaluation batch sizes without re-reading the model.
 """
 from __future__ import annotations
 
@@ -89,8 +94,7 @@ def run(full: bool = True) -> List[Dict]:
     params = train_cnn(1024 if full else 256, 6 if full else 2)
     test_x, test_y = make_dataset(512 if full else 128, seed=99)
     tx, ty = jnp.asarray(test_x), jnp.asarray(test_y)
-    g = cnn_to_ir(CNN, {k: np.asarray(v) for k, v in params.items()},
-                  batch=len(test_y))
+    g = cnn_to_ir(CNN, {k: np.asarray(v) for k, v in params.items()})
     flow = DesignFlow(g)
     points = list(TABLE2_POINTS) + list(HETERO_POINTS)
     auto_pm, _ = flow.explore_mixed_precision((tx[:64],), tol=0.02)
@@ -98,7 +102,7 @@ def run(full: bool = True) -> List[Dict]:
     rows = []
     for dt in points:
         res = flow.run(targets=("stream",), dtconfig=dt, calib_inputs=(tx[:64],))
-        exe = jax.jit(res.executables["stream"])
+        exe = res.batched["stream"]
         logits = exe(tx)
         acc = float(jnp.mean((jnp.argmax(logits, -1) == ty)))
         # latency: best-of-5 jitted wall time (relative ordering on CPU)
@@ -111,6 +115,7 @@ def run(full: bool = True) -> List[Dict]:
         us = min(times) * 1e6 / len(test_y)
         fl = model_flops(1)
         wb = weight_bytes(res.graph, dt)
+        fifo_b = res.writers["stream"].topology()["total_fifo_bytes"]
         act_bits = dt.default.act_bits if isinstance(dt, PrecisionMap) else dt.act_bits
         act_bytes = 2 * 28 * 28 * 16 * (act_bits / 8)
         energy_uj = (fl * PJ_PER_FLOP + (wb + act_bytes) * PJ_PER_BYTE) * 1e-6
@@ -124,6 +129,7 @@ def run(full: bool = True) -> List[Dict]:
             "datatype": label,
             "zero_weights_pct": round(100 * res.stats.get("zero_weight_frac", 0.0), 1),
             "weight_bytes": wb,
+            "fifo_bytes": fifo_b,
             "accuracy_pct": round(100 * acc, 1),
             "us_per_image": round(us, 1),
             "est_energy_uj": round(energy_uj, 2),

@@ -43,8 +43,7 @@ def main():
     print("\n== composing the adaptive accelerator (MDC step) ==")
     params = train_cnn(256, 2)
     test_x, test_y = make_dataset(128, seed=99)
-    g = cnn_to_ir(CNN, {k: np.asarray(v) for k, v in params.items()},
-                  batch=len(test_y))
+    g = cnn_to_ir(CNN, {k: np.asarray(v) for k, v in params.items()})
     flow = DesignFlow(g)
     pts = [WorkingPoint("accurate", 8), WorkingPoint("balanced", 4),
            WorkingPoint("frugal", 2)]

@@ -8,7 +8,11 @@ deployable accelerator + reports.
 ``run`` applies the default pass pipeline before handing the graph to the
 writers; ``run(passes=())`` skips all rewrites (raw node-by-node
 interpretation, the pre-refactor behaviour), and ``run(passes=[...])``
-substitutes a custom pipeline.  ``dtconfig`` accepts either a uniform
+substitutes a custom pipeline.  Graphs read with a symbolic batch dim
+compile to batch-polymorphic artifacts: ``FlowResult.batched[target]``
+serves any leading-dim size from one compiled graph (LRU of traced
+shapes), and ``fifo_slack`` scales the value_info-derived FIFO depths the
+stream writer stamps on its topology.  ``dtconfig`` accepts either a uniform
 :class:`~repro.quant.qtypes.DatatypeConfig` or a heterogeneous
 :class:`~repro.quant.qtypes.PrecisionMap`; ``explore_mixed_precision``
 searches for the latter greedily against the float reference.
@@ -25,7 +29,7 @@ from repro.core.ir import Graph
 from repro.core.passes import (PassManager, default_pipeline,
                                explore_mixed_precision, strip_precision,
                                structural_pipeline)
-from repro.core.writers.jax_writer import JaxWriter
+from repro.core.writers.jax_writer import BatchedExecutable, JaxWriter
 from repro.core.writers.stream_writer import StreamWriter
 from repro.core.writers.dist_writer import DistWriter
 from repro.core.adaptive import AdaptiveAccelerator, WorkingPoint
@@ -41,9 +45,12 @@ Precision = Union[DatatypeConfig, PrecisionMap]
 class FlowResult:
     graph: Graph                      # the pass-transformed graph
     writers: Dict[str, JaxWriter]
-    executables: Dict[str, Callable]
+    executables: Dict[str, Callable]  # raw interpreters (shape-polymorphic)
     act_ranges: Dict[str, float]
     stats: Dict[str, float] = field(default_factory=dict)
+    # per-target batch-polymorphic artifacts: one compiled graph serving any
+    # leading-dim size via an LRU of traced shapes
+    batched: Dict[str, BatchedExecutable] = field(default_factory=dict)
 
 
 def _split_precision(dtconfig: Optional[Precision]
@@ -89,7 +96,18 @@ class DesignFlow:
     def run(self, targets: Sequence[str] = ("jax",),
             dtconfig: Optional[Precision] = None,
             calib_inputs: Optional[tuple] = None,
-            passes: Optional[Sequence[Callable]] = None) -> FlowResult:
+            passes: Optional[Sequence[Callable]] = None,
+            fifo_slack: float = 1.0,
+            batch_cache: int = 8,
+            writer_kwargs: Optional[Dict[str, Dict]] = None) -> FlowResult:
+        """Compile the graph for ``targets``.
+
+        ``fifo_slack`` scales every FIFO depth the stream writer derives from
+        ``value_info`` (rate-mismatch headroom); ``batch_cache`` bounds the
+        per-target LRU of traced batch shapes in ``FlowResult.batched``;
+        ``writer_kwargs`` passes extra constructor kwargs per target
+        (``fifo_slack`` is sugar for ``{"stream": {"fifo_slack": ...}}``).
+        """
         default_dt, min_act, min_wt = _split_precision(dtconfig)
         g = self.transform(dtconfig, passes)
         act_ranges: Dict[str, float] = {}
@@ -99,15 +117,19 @@ class DesignFlow:
             # activation ranges, not values already clipped by quantization
             act_ranges = self.calibrate(*calib_inputs,
                                         graph=strip_precision(g))
-        writers, exes = {}, {}
+        wkw = {t: dict((writer_kwargs or {}).get(t, {})) for t in targets}
+        if "stream" in wkw:
+            wkw["stream"].setdefault("fifo_slack", fifo_slack)
+        writers, exes, batched = {}, {}, {}
         for t in targets:
-            w = WRITERS[t](g, default_dt, act_ranges)
+            w = WRITERS[t](g, default_dt, act_ranges, **wkw[t])
             writers[t] = w
             exes[t] = w.build()
+            batched[t] = w.build_batched(max_entries=batch_cache)
         stats = {}
         if dtconfig is not None and min_wt < 32:
             stats = graph_weight_stats(g, default_dt)
-        return FlowResult(g, writers, exes, act_ranges, stats)
+        return FlowResult(g, writers, exes, act_ranges, stats, batched)
 
     # -- mixed-precision exploration ----------------------------------------
     def explore_mixed_precision(self, calib_inputs: tuple, **kwargs

@@ -19,17 +19,56 @@ passes in :mod:`repro.core.passes`:
 
 Graphs also maintain O(V+E) structural indices (``producer_index`` /
 ``consumer_index``) used by ``topo_order``, the passes, and the writers.
+
+Shapes may carry ONE symbolic dimension — the leading (batch) dim, written
+``BATCH`` (the string ``"N"``).  A graph whose input batch is symbolic
+compiles to a *batch-polymorphic* executable: the writers trace/jit per
+concrete batch size on demand (LRU of traced shapes) instead of baking a
+literal batch into the artifact.  All non-leading dims stay concrete ints,
+which is what the streaming FIFO-sizing model requires (per-row volumes
+never involve the batch dim).
 """
 from __future__ import annotations
 
 import json
 from collections import deque
 from dataclasses import dataclass, field, asdict
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.quant.qtypes import DatatypeConfig
+
+# Symbolic leading-dimension sentinel.  ``TensorInfo.shape`` entries are ints
+# except (at most) the leading dim, which may be this marker.
+BATCH = "N"
+
+Dim = Union[int, str]
+
+
+def is_symbolic(dim: Dim) -> bool:
+    """True for the symbolic batch marker (any string dim)."""
+    return isinstance(dim, str)
+
+
+def has_symbolic(shape) -> bool:
+    return any(is_symbolic(d) for d in shape)
+
+
+def concretize(shape, batch: int) -> Tuple[int, ...]:
+    """Substitute a concrete batch size for every symbolic dim."""
+    return tuple(int(batch) if is_symbolic(d) else int(d) for d in shape)
+
+
+def static_elems(shape) -> int:
+    """Element count of the non-symbolic dims (per-item volume for a
+    batch-leading tensor) — what FIFO sizing and weight-storage math use."""
+    n = 1
+    for d in shape:
+        if not is_symbolic(d):
+            n *= int(d)
+    return n
+
 
 SUPPORTED_OPS = {
     "Conv", "MaxPool", "BatchNormalization", "Relu", "Gemm", "MatMul",
@@ -43,8 +82,15 @@ SUPPORTED_OPS = {
 @dataclass
 class TensorInfo:
     name: str
-    shape: Tuple[int, ...]
+    shape: Tuple[Dim, ...]     # leading dim may be the symbolic BATCH marker
     dtype: str = "float32"
+
+    @property
+    def is_batched(self) -> bool:
+        return has_symbolic(self.shape)
+
+    def concrete(self, batch: int) -> Tuple[int, ...]:
+        return concretize(self.shape, batch)
 
 
 @dataclass

@@ -5,17 +5,24 @@ with its shape and dtype.  The streaming writers size line buffers and FIFO
 depths from these annotations, and the distributed writer derives output
 sharding specs, so inference must agree exactly with what the executables
 produce — ``tests/test_passes.py`` checks inferred vs. executed shapes.
+
+The leading (batch) dim may be the symbolic :data:`repro.core.ir.BATCH`
+marker; every rule propagates it untouched, so a batch-polymorphic graph gets
+fully-static *per-item* annotations (spatial dims, channels) — exactly the
+part FIFO sizing needs — while the executable stays free over the batch.
 """
 from __future__ import annotations
 
 import math
+from itertools import zip_longest
 from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.ir import Graph, Node, TensorInfo
+from repro.core.ir import (BATCH, Dim, Graph, Node, TensorInfo, has_symbolic,
+                           is_symbolic, static_elems)
 
-Shape = Tuple[int, ...]
+Shape = Tuple[Dim, ...]
 
 _RULES: Dict[str, Callable] = {}
 
@@ -74,21 +81,49 @@ def _shape_matmul(node: Node, ins: List[Shape]) -> List[Shape]:
 
 @_rule("Add")
 def _shape_add(node: Node, ins: List[Shape]) -> List[Shape]:
-    return [tuple(np.broadcast_shapes(ins[0], ins[1]))]
+    # numpy-style broadcast extended with the symbolic batch dim: BATCH
+    # broadcasts with itself and with 1, never with a concrete size > 1.
+    out: List[Dim] = []
+    for a, b in zip_longest(reversed(ins[0]), reversed(ins[1]), fillvalue=1):
+        if a == b or b == 1:
+            out.append(a)
+        elif a == 1:
+            out.append(b)
+        elif is_symbolic(a) or is_symbolic(b):
+            raise ValueError(
+                f"node {node.name}: cannot broadcast symbolic dim against "
+                f"concrete size ({a} vs {b})")
+        else:
+            out.append(int(np.broadcast_shapes((a,), (b,))[0]))
+    return [tuple(reversed(out))]
 
 
 @_rule("Flatten")
 def _shape_flatten(node: Node, ins: List[Shape]) -> List[Shape]:
     x = ins[0]
-    return [(x[0], int(np.prod(x[1:])))]
+    return [(x[0], int(np.prod([int(d) for d in x[1:]])))]
 
 
 @_rule("Reshape")
 def _shape_reshape(node: Node, ins: List[Shape]) -> List[Shape]:
     target = list(node.attrs["shape"])
+    if -1 not in target and has_symbolic(ins[0]):
+        raise ValueError(
+            f"node {node.name}: reshape of a batch-polymorphic tensor needs "
+            f"a -1 wildcard to carry the symbolic batch (got {target})")
     if -1 in target:
         known = int(np.prod([d for d in target if d != -1]))
-        target[target.index(-1)] = int(np.prod(ins[0])) // max(known, 1)
+        if has_symbolic(ins[0]):
+            # the -1 slot absorbs the symbolic batch; per-item volume must
+            # already be covered by the concrete target dims
+            if static_elems(ins[0]) != known:
+                raise ValueError(
+                    f"node {node.name}: reshape of a batch-polymorphic tensor "
+                    f"must keep the per-item volume in concrete dims "
+                    f"({static_elems(ins[0])} != {known})")
+            target[target.index(-1)] = BATCH
+        else:
+            target[target.index(-1)] = int(np.prod(ins[0])) // max(known, 1)
     return [tuple(target)]
 
 
@@ -96,6 +131,9 @@ def _shape_reshape(node: Node, ins: List[Shape]) -> List[Shape]:
 def _shape_split(node: Node, ins: List[Shape]) -> List[Shape]:
     x = list(ins[0])
     axis = node.attrs.get("axis", -1)
+    if is_symbolic(x[axis]):
+        raise ValueError(f"node {node.name}: cannot Split the symbolic "
+                         f"batch dim")
     x[axis] = x[axis] // len(node.outputs)
     return [tuple(x)] * len(node.outputs)
 
@@ -112,6 +150,8 @@ def infer_shapes(graph: Graph) -> Graph:
         dtype = vi[n.inputs[0]].dtype if n.inputs else "float32"
         shapes = _RULES[n.op](n, ins)
         for oname, shape in zip(n.outputs, shapes):
-            vi[oname] = TensorInfo(oname, tuple(int(d) for d in shape), dtype)
+            vi[oname] = TensorInfo(
+                oname, tuple(d if is_symbolic(d) else int(d) for d in shape),
+                dtype)
     graph.value_info = vi
     return graph

@@ -8,6 +8,11 @@ Sources supported:
 Every reader runs the shape-inference pass on the graph it produces, so a
 freshly read IR already carries ``value_info`` annotations for downstream
 passes and writers (further rewrites re-infer as part of the pipeline).
+
+By default the graph input's leading dim is the *symbolic* batch marker
+(:data:`repro.core.ir.BATCH`), so one compiled artifact serves any request
+size — pass ``batch=<int>`` to pin a literal batch (the pre-polymorphism
+behaviour, still used when lowering ahead-of-time for a fixed shape).
 """
 from __future__ import annotations
 
@@ -16,7 +21,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.configs.mnist_cnn import CNNConfig
-from repro.core.ir import Graph, Node, TensorInfo
+from repro.core.ir import BATCH, Dim, Graph, Node, TensorInfo
 from repro.core.passes.shape_infer import infer_shapes
 
 
@@ -29,10 +34,12 @@ def read_file(path: str) -> Graph:
 
 
 def cnn_to_ir(cfg: CNNConfig, params: Dict[str, np.ndarray],
-              batch: int = 1) -> Graph:
+              batch: Optional[int] = None) -> Graph:
     """The paper's 2-conv-block + FC MNIST classifier as an IR graph.
 
     Layout is NHWC; Conv weights HWIO (converted by the writers as needed).
+    ``batch=None`` (default) records the symbolic batch dim — the compiled
+    executable then serves any leading-dim size from one artifact.
     """
     h, w = cfg.image_hw
     nodes = []
@@ -62,10 +69,11 @@ def cnn_to_ir(cfg: CNNConfig, params: Dict[str, np.ndarray],
     inits["fc/w"] = np.asarray(params["fc/w"])
     inits["fc/b"] = np.asarray(params["fc/b"])
     nodes.append(Node("Gemm", "fc", ["flat", "fc/w", "fc/b"], ["logits"]))
+    bdim: Dim = BATCH if batch is None else int(batch)
     g = Graph(
         name="mnist-cnn",
         nodes=nodes,
-        inputs=[TensorInfo("input", (batch, cfg.image_hw[0], cfg.image_hw[1],
+        inputs=[TensorInfo("input", (bdim, cfg.image_hw[0], cfg.image_hw[1],
                                      cfg.in_channels))],
         outputs=["logits"],
         initializers=inits,
@@ -74,9 +82,10 @@ def cnn_to_ir(cfg: CNNConfig, params: Dict[str, np.ndarray],
     return infer_shapes(g)
 
 
-def mlp_to_ir(layer_sizes, params: Dict[str, np.ndarray], batch: int = 1,
-              name: str = "mlp") -> Graph:
-    """Fully-connected stack (the HLS4ML comparison topology, Table I)."""
+def mlp_to_ir(layer_sizes, params: Dict[str, np.ndarray],
+              batch: Optional[int] = None, name: str = "mlp") -> Graph:
+    """Fully-connected stack (the HLS4ML comparison topology, Table I).
+    ``batch=None`` records the symbolic batch dim (see :func:`cnn_to_ir`)."""
     nodes = []
     inits: Dict[str, np.ndarray] = {}
     x = "input"
@@ -88,7 +97,8 @@ def mlp_to_ir(layer_sizes, params: Dict[str, np.ndarray], batch: int = 1,
         if i < len(layer_sizes) - 2:
             nodes.append(Node("Relu", f"relu{i}", [out], [f"relu{i}_out"]))
             x = f"relu{i}_out"
-    g = Graph(name, nodes, [TensorInfo("input", (batch, layer_sizes[0]))],
+    bdim: Dim = BATCH if batch is None else int(batch)
+    g = Graph(name, nodes, [TensorInfo("input", (bdim, layer_sizes[0]))],
               ["logits"], inits)
     g.validate()
     return infer_shapes(g)

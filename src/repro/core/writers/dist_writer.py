@@ -8,6 +8,12 @@ Registers nothing in the op registry: every actor runs the reference ("jax")
 implementation and only the partitioning changes.  When the shape-inference
 pass has annotated the graph, output shardings replicate the trailing dims
 explicitly instead of relying on rank inference.
+
+Batch polymorphism: a graph whose input leading dim is the symbolic
+:data:`repro.core.ir.BATCH` marker cannot be AOT-lowered without a concrete
+batch — ``lower_compile`` requires ``batch=`` for such graphs, and
+``build_batched`` keeps an LRU of per-batch AOT-compiled SPMD executables so
+one ``DesignFlow.run`` artifact serves varying request sizes on the mesh.
 """
 from __future__ import annotations
 
@@ -17,7 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.writers.jax_writer import JaxWriter
+from repro.core.ir import has_symbolic
+from repro.core.writers.jax_writer import BatchedExecutable, JaxWriter
 from repro.sharding import batch_axes
 
 
@@ -42,8 +49,53 @@ class DistWriter(JaxWriter):
         fn = self.build_distributed(mesh)
         args = []
         for t in self.graph.inputs:
-            shape = (batch, *t.shape[1:]) if batch else tuple(t.shape)
+            if batch is not None:
+                shape = t.concrete(batch) if t.is_batched \
+                    else (batch, *t.shape[1:])
+            elif has_symbolic(t.shape):
+                raise ValueError(
+                    f"input {t.name!r} has a symbolic batch dim; pass "
+                    f"batch= to lower_compile (or use build_batched)")
+            else:
+                shape = tuple(t.shape)
             args.append(jax.ShapeDtypeStruct(shape, jnp.dtype(t.dtype)))
         lowered = fn.lower(*args)
         compiled = lowered.compile()
         return lowered, compiled
+
+    def build_batched(self, mesh: Optional[Mesh] = None,
+                      max_entries: int = 8) -> BatchedExecutable:
+        """Batch-polymorphic SPMD artifact: LRU of per-batch AOT-compiled
+        executables on ``mesh`` (without a mesh, falls back to the plain
+        single-device batched executable).
+
+        The data axis shards the leading dim, so a request batch that does
+        not divide the mesh's DP size is zero-padded up to the next multiple
+        and the output sliced back — any batch size serves, at the cost of
+        running the padded remainder.
+        """
+        if mesh is None:
+            return super().build_batched(max_entries=max_entries)
+        from repro.sharding import dp_size
+        dp = dp_size(mesh)
+
+        def compile_for(sig):
+            batch = sig[0][0][0]
+            padded = -(-batch // dp) * dp
+            _, compiled = self.lower_compile(mesh, batch=padded)
+            if padded == batch:
+                return compiled
+
+            def run_padded(*inputs):
+                grown = [jnp.concatenate(
+                    [x, jnp.zeros((padded - x.shape[0], *x.shape[1:]),
+                                  x.dtype)]) for x in inputs]
+                out = compiled(*grown)
+                if isinstance(out, tuple):
+                    return tuple(o[:batch] for o in out)
+                return out[:batch]
+
+            return run_padded
+
+        return BatchedExecutable(self.build(), max_entries=max_entries,
+                                 compile_fn=compile_for)

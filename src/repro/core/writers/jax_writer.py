@@ -15,11 +15,16 @@ annotated IR:
   the precision-assignment pass) quantizes its weights and output FIFOs with
   its own ``Dx-Wy`` point, falling back to the writer's default config;
 * every node output is bound into the environment (multi-output ops such as
-  ``Split`` work; previously only ``outputs[0]`` was bound).
+  ``Split`` work; previously only ``outputs[0]`` was bound);
+* ``build_batched`` wraps the interpreter in a :class:`BatchedExecutable` —
+  a batch-polymorphic artifact that re-jits per concrete input signature
+  with an LRU of traced shapes, so one compiled graph (symbolic leading dim,
+  see :data:`repro.core.ir.BATCH`) serves batch 1..N without recompiling.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +38,63 @@ from repro.quant.ptq import effective_weight_dt, weight_qtype
 # Backward-compatible alias: the reference op table (live view of the "jax"
 # registry entries).
 OP_IMPLS: Dict[str, Callable] = OP_REGISTRY["jax"]
+
+Signature = Tuple[Tuple[Tuple[int, ...], str], ...]
+
+
+class BatchedExecutable:
+    """Batch-polymorphic compiled artifact.
+
+    Wraps a writer's interpreter; each call dispatches on the concrete input
+    signature (shapes + dtypes) and re-jits on a miss, keeping at most
+    ``max_entries`` traced executables in an LRU.  Each signature gets its
+    *own* ``jax.jit`` object so eviction actually releases the trace — one
+    shared jit would grow an unbounded internal shape cache, which is what
+    this class exists to bound for long-running serving.
+    """
+
+    def __init__(self, fn: Callable, max_entries: int = 8,
+                 compile_fn: Optional[Callable[[Signature], Callable]] = None):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self._fn = fn
+        self._compile = compile_fn or (lambda sig: jax.jit(fn))
+        self._cache: "OrderedDict[Signature, Callable]" = OrderedDict()
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def signature(*inputs) -> Signature:
+        return tuple((tuple(jnp.shape(x)), str(jnp.result_type(x)))
+                     for x in inputs)
+
+    def executable_for(self, *inputs) -> Callable:
+        """The compiled executable serving these inputs' signature."""
+        sig = self.signature(*inputs)
+        exe = self._cache.get(sig)
+        if exe is None:
+            self.misses += 1
+            exe = self._compile(sig)
+            self._cache[sig] = exe
+            while len(self._cache) > self.max_entries:
+                self._cache.popitem(last=False)
+        else:
+            self.hits += 1
+            self._cache.move_to_end(sig)
+        return exe
+
+    def __call__(self, *inputs):
+        return self.executable_for(*inputs)(*inputs)
+
+    @property
+    def cached_signatures(self) -> Tuple[Signature, ...]:
+        return tuple(self._cache)
+
+    @property
+    def cached_batches(self) -> Tuple[int, ...]:
+        """Leading-dim sizes currently resident (serving telemetry)."""
+        return tuple(sig[0][0][0] for sig in self._cache if sig and sig[0][0])
 
 
 class JaxWriter:
@@ -109,3 +171,8 @@ class JaxWriter:
 
     def build_jit(self) -> Callable:
         return jax.jit(self.build())
+
+    def build_batched(self, max_entries: int = 8) -> BatchedExecutable:
+        """Batch-polymorphic executable: one artifact, any leading-dim size,
+        LRU of per-signature traces (see :class:`BatchedExecutable`)."""
+        return BatchedExecutable(self.build(), max_entries=max_entries)

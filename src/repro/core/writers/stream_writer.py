@@ -8,15 +8,40 @@ artifact the Multi-Dataflow Composer consumes (``topology()``; compare the
 paper's XDF/CAL files).  Each FIFO in the topology is labelled with the
 *consumer actor's* per-layer ``Dx-Wy`` datatype, so a heterogeneous precision
 assignment is visible in the emitted network description.
+
+FIFO sizing
+-----------
+Every connection carries a concrete ``depth`` (elements) derived from the
+producer tensor's ``Graph.value_info`` annotation — the buffer a streaming
+implementation must provision before the consumer can fire:
+
+* **windowed consumers** (Conv / FusedConv / MaxPool) use the line-buffer
+  model: ``(kh - 1)`` full image rows plus ``kw`` pixels of the NHWC stream,
+  i.e. ``(kh - 1) * W * C + kw * C`` elements;
+* **matrix consumers** (Gemm / MatMul) need the whole per-item activation
+  vector resident before the first MAC, so the depth is the tensor's static
+  per-item volume;
+* **pointwise consumers** (Relu, BatchNormalization, Softmax, Flatten, ...)
+  stream element-by-element and only need one pixel's channel vector in
+  flight.
+
+Depths are multiplied by ``fifo_slack`` (rate-mismatch headroom; the
+``--fifo-slack`` CLI knob) and reported per-FIFO in bytes at the consumer's
+activation precision; ``topology()`` aggregates them as
+``total_fifo_bytes`` so benchmarks can put buffer memory next to accuracy.
+The symbolic batch dim never enters the model — FIFOs buffer *per-item*
+streams, which is what makes one sized topology valid for any batch.
 """
 from __future__ import annotations
 
 import json
+import math
 from typing import Dict
 
 import jax
 
-from repro.core.ir import Node
+from repro.core.ir import Node, TensorInfo, static_elems
+from repro.core.passes.shape_infer import infer_shapes
 from repro.core.writers.jax_writer import JaxWriter
 from repro.core.writers.registry import register_op
 
@@ -37,14 +62,50 @@ def _op_fused_conv_stream(node: Node, env):
 
 
 _CONV_OPS = ("Conv", "FusedConv")
+# consumers whose firing rule needs a sliding window of the input stream
+_WINDOWED_OPS = ("Conv", "FusedConv", "MaxPool")
+# consumers that reduce over the whole per-item activation vector
+_MATRIX_OPS = ("Gemm", "MatMul")
 
 
 class StreamWriter(JaxWriter):
     target = "stream"
 
+    def __init__(self, graph, dtconfig=None, act_ranges=None, *,
+                 fifo_slack: float = 1.0):
+        super().__init__(graph, dtconfig, act_ranges)
+        if fifo_slack <= 0:
+            raise ValueError(f"fifo_slack must be positive, got {fifo_slack}")
+        self.fifo_slack = float(fifo_slack)
+
+    # ---- FIFO sizing (value_info-driven) ----------------------------------
+    def _tensor_info(self, tensor: str) -> TensorInfo:
+        if tensor not in self.graph.value_info:
+            infer_shapes(self.graph)
+        return self.graph.value_info[tensor]
+
+    def fifo_depth(self, tensor: str, consumer: Node) -> int:
+        """Elements the FIFO feeding ``consumer`` must hold (before slack)."""
+        shape = self._tensor_info(tensor).shape
+        if consumer.op in _WINDOWED_OPS and len(shape) >= 4:
+            ks = consumer.attrs.get("kernel_shape")
+            if ks is None:
+                # Conv may omit kernel_shape; the window is the weight's HW
+                ks = self.graph.initializers[consumer.inputs[1]].shape[:2]
+            kh, kw = ks
+            w, c = int(shape[-2]), int(shape[-1])
+            depth = (kh - 1) * w * c + kw * c
+        elif consumer.op in _MATRIX_OPS:
+            # per-item volume: the leading dim is the batch whether symbolic
+            # or pinned — FIFOs buffer one item's stream
+            depth = static_elems(shape[1:])
+        else:
+            depth = int(shape[-1])
+        return max(1, math.ceil(depth * self.fifo_slack))
+
     # ---- dataflow topology (XDF analogue) ---------------------------------
     def topology(self) -> Dict:
-        """Actors + FIFO connections of the streaming accelerator."""
+        """Actors + sized FIFO connections of the streaming accelerator."""
         order = self.graph.topo_order()
         producers = self.graph.producer_index()
         input_names = {t.name for t in self.graph.inputs}
@@ -64,6 +125,8 @@ class StreamWriter(JaxWriter):
                     actor["fused"] = n.attrs.get("fused_from", [])
             actors.append(actor)
         conns = []
+        fifo_id = 0          # global counter: ids must be unique network-wide
+        total_bytes = 0
         for n in order:
             dt = self.node_dt(n)
             for i in n.inputs:
@@ -73,10 +136,17 @@ class StreamWriter(JaxWriter):
                     src = "input"
                 else:
                     continue  # weight/bias initializers are not FIFOs
-                conns.append({"src": src, "dst": n.name, "fifo": i,
+                depth = self.fifo_depth(i, n)
+                depth_bytes = math.ceil(depth * dt.act_bits / 8)
+                total_bytes += depth_bytes
+                conns.append({"fifo": f"f{fifo_id}", "tensor": i,
+                              "src": src, "dst": n.name,
+                              "depth": depth, "depth_bytes": depth_bytes,
                               "datatype": f"D{dt.act_bits}-W{dt.weight_bits}"})
+                fifo_id += 1
         return {"network": self.graph.name, "actors": actors,
-                "connections": conns}
+                "connections": conns, "fifo_slack": self.fifo_slack,
+                "total_fifo_bytes": total_bytes}
 
     def save_topology(self, path: str) -> None:
         with open(path, "w") as f:

@@ -1,0 +1,161 @@
+"""Golden-file + structural tests for ``StreamWriter.topology()``.
+
+The canonical MNIST-CNN topology JSON is checked in under
+``tests/golden/``; any change to actor composition, FIFO ids, derived FIFO
+depths, or datatype labels shows up as a reviewable diff.  Regenerate after
+an *intentional* model change with:
+
+    GOLDEN_REGEN=1 PYTHONPATH=src python -m pytest tests/test_topology_golden.py
+"""
+import json
+import math
+import os
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.mnist_cnn import CONFIG as CNN
+from repro.core.flow import DesignFlow
+from repro.core.ir import Graph, Node, TensorInfo
+from repro.core.reader import cnn_to_ir
+from repro.core.writers.stream_writer import StreamWriter
+from repro.models import cnn
+from repro.quant.qtypes import DatatypeConfig
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "mnist_cnn_topology.json"
+
+
+def canonical_topology(fifo_slack: float = 1.0):
+    """The check-in reference: seed-pinned MNIST CNN, symbolic batch,
+    uniform D16-W8, default compile pipeline."""
+    params = cnn.init_params(CNN, jax.random.PRNGKey(0))
+    g = cnn_to_ir(CNN, {k: np.asarray(v) for k, v in params.items()})
+    res = DesignFlow(g).run(targets=("stream",),
+                            dtconfig=DatatypeConfig(16, 8),
+                            fifo_slack=fifo_slack)
+    return res.writers["stream"].topology()
+
+
+def test_topology_matches_golden_file():
+    topo = json.loads(json.dumps(canonical_topology()))  # normalize tuples
+    if os.environ.get("GOLDEN_REGEN"):
+        GOLDEN.parent.mkdir(exist_ok=True)
+        GOLDEN.write_text(json.dumps(topo, indent=1) + "\n")
+    assert GOLDEN.exists(), "golden file missing — run with GOLDEN_REGEN=1"
+    want = json.loads(GOLDEN.read_text())
+    assert topo == want, (
+        "topology drifted from tests/golden/mnist_cnn_topology.json; if the "
+        "change is intentional, regenerate with GOLDEN_REGEN=1")
+
+
+def test_every_fifo_has_positive_integer_depth():
+    topo = canonical_topology()
+    assert topo["connections"], "topology has no FIFOs"
+    for c in topo["connections"]:
+        assert isinstance(c["depth"], int) and c["depth"] > 0, c
+        assert isinstance(c["depth_bytes"], int) and c["depth_bytes"] > 0, c
+    assert topo["total_fifo_bytes"] == sum(c["depth_bytes"]
+                                           for c in topo["connections"])
+
+
+def test_fifo_depths_follow_value_info_models():
+    """Line-buffer model for windowed consumers, per-item volume for Gemm."""
+    topo = canonical_topology()
+    by_dst = {c["dst"]: c for c in topo["connections"]}
+    # conv0 reads the (N, 28, 28, 1) input with a 3x3 window:
+    # (3-1)*28*1 + 3*1 line-buffer elements
+    assert by_dst["conv0"]["depth"] == 2 * 28 * 1 + 3 * 1
+    # pool0 reads conv0's (N, 28, 28, 16) stream with a 2x2 window
+    assert by_dst["pool0"]["depth"] == 1 * 28 * 16 + 2 * 16
+    # the classifier needs the whole flattened per-item vector resident
+    assert by_dst["fc"]["depth"] == CNN.fc_in
+
+
+def test_fifo_slack_scales_depths():
+    base = canonical_topology(fifo_slack=1.0)
+    slacked = canonical_topology(fifo_slack=2.5)
+    assert slacked["fifo_slack"] == 2.5
+    for b, s in zip(base["connections"], slacked["connections"]):
+        assert s["depth"] == math.ceil(b["depth"] * 2.5)
+    assert slacked["total_fifo_bytes"] > base["total_fifo_bytes"]
+
+
+def test_fifo_ids_globally_unique_under_fanout():
+    """Regression: ids used to restart per node, so one tensor fanning out to
+    two consumers produced colliding FIFO labels in the XDF analogue."""
+    rng = np.random.default_rng(0)
+    inits = {
+        "w1": rng.normal(size=(6, 4)).astype(np.float32),
+        "w2": rng.normal(size=(6, 4)).astype(np.float32),
+    }
+    g = Graph("fanout", [
+        Node("Gemm", "g1", ["input", "w1"], ["a"]),
+        Node("Gemm", "g2", ["input", "w2"], ["b"]),
+        Node("Add", "sum", ["a", "b"], ["out"]),
+    ], [TensorInfo("input", ("N", 6))], ["out"], inits)
+    topo = StreamWriter(g).topology()
+    conns = topo["connections"]
+    assert len(conns) == 4                       # input x2 + a + b
+    ids = [c["fifo"] for c in conns]
+    assert len(set(ids)) == len(ids), f"colliding FIFO ids: {ids}"
+    # the two edges carrying the same tensor are distinct FIFOs
+    input_edges = [c for c in conns if c["tensor"] == "input"]
+    assert len(input_edges) == 2
+    assert input_edges[0]["fifo"] != input_edges[1]["fifo"]
+    for c in conns:
+        assert c["depth"] > 0
+
+
+def test_save_topology_roundtrip_includes_aggregate_bytes(tmp_path):
+    params = cnn.init_params(CNN, jax.random.PRNGKey(0))
+    g = cnn_to_ir(CNN, {k: np.asarray(v) for k, v in params.items()})
+    res = DesignFlow(g).run(targets=("stream",),
+                            dtconfig=DatatypeConfig(16, 8))
+    path = tmp_path / "net.xdf.json"
+    res.writers["stream"].save_topology(str(path))
+    with open(path) as f:
+        loaded = json.load(f)
+    assert loaded["total_fifo_bytes"] > 0
+    assert loaded["fifo_slack"] == 1.0
+    assert loaded == json.loads(json.dumps(res.writers["stream"].topology()))
+
+
+def test_stream_writer_rejects_nonpositive_slack():
+    params = cnn.init_params(CNN, jax.random.PRNGKey(0))
+    g = cnn_to_ir(CNN, {k: np.asarray(v) for k, v in params.items()})
+    with pytest.raises(ValueError):
+        StreamWriter(g, fifo_slack=0.0)
+
+
+def test_fifo_depths_are_batch_independent():
+    """A pinned-batch graph must size FIFOs per item, identical to the
+    symbolic-batch graph — streaming buffers never scale with batch."""
+    params = cnn.init_params(CNN, jax.random.PRNGKey(0))
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    sym = DesignFlow(cnn_to_ir(CNN, np_params)).run(targets=("stream",))
+    pin = DesignFlow(cnn_to_ir(CNN, np_params, batch=8)).run(
+        targets=("stream",))
+    t_sym = sym.writers["stream"].topology()
+    t_pin = pin.writers["stream"].topology()
+    assert [c["depth"] for c in t_pin["connections"]] == \
+        [c["depth"] for c in t_sym["connections"]]
+    assert t_pin["total_fifo_bytes"] == t_sym["total_fifo_bytes"]
+    by_dst = {c["dst"]: c for c in t_pin["connections"]}
+    assert by_dst["fc"]["depth"] == CNN.fc_in          # not 8 * fc_in
+
+
+def test_fifo_depth_falls_back_to_weight_window_without_kernel_shape():
+    """Conv nodes may omit kernel_shape (shape inference reads the weight's
+    HW dims); topology() must size the line buffer the same way."""
+    rng = np.random.default_rng(0)
+    inits = {"w": rng.normal(size=(3, 3, 2, 4)).astype(np.float32),
+             "b": rng.normal(size=(4,)).astype(np.float32)}
+    g = Graph("nok", [
+        Node("Conv", "c", ["input", "w", "b"], ["out"],
+             {"pads": "SAME", "strides": [1, 1]}),
+    ], [TensorInfo("input", ("N", 8, 8, 2))], ["out"], inits)
+    topo = StreamWriter(g).topology()
+    (conn,) = topo["connections"]
+    assert conn["depth"] == (3 - 1) * 8 * 2 + 3 * 2
