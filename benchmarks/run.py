@@ -6,6 +6,7 @@
   table1_frameworks       - Table I analogue (execution-style comparison)
   table2_mixed_precision  - Table II reproduction (Dx-Wy exploration)
   adaptive_switch         - MDC runtime-adaptivity benchmark
+  serve_throughput        - coalesced vs naive per-request serving
   roofline                - §Roofline table aggregated from dry-run artifacts
 """
 from __future__ import annotations
@@ -35,7 +36,7 @@ def main() -> None:
             failures.append((name, repr(e)))
             traceback.print_exc()
 
-    from benchmarks import (adaptive_switch, roofline_table,
+    from benchmarks import (adaptive_switch, roofline_table, serve_throughput,
                             table1_frameworks, table2_mixed_precision)
 
     section("table1_frameworks", lambda: [
@@ -48,6 +49,9 @@ def main() -> None:
     section("adaptive_switch", lambda: [
         print("adaptive_switch," + ",".join(f"{k}={v}" for k, v in r.items()))
         for r in adaptive_switch.run(full)])
+    section("serve_throughput", lambda: [
+        print("serve_throughput," + ",".join(f"{k}={v}" for k, v in r.items()))
+        for r in serve_throughput.run(full)])
     section("roofline", roofline_table.main)
 
     if failures:

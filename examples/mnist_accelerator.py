@@ -12,7 +12,6 @@ _ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, _ROOT)                      # for `benchmarks.*`
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -21,7 +20,6 @@ from repro.core.adaptive import RuntimePolicy, WorkingPoint
 from repro.core.flow import DesignFlow
 from repro.core.reader import cnn_to_ir
 from repro.data.mnist import make_dataset
-from repro.quant.qtypes import TABLE2_POINTS
 
 
 def main():

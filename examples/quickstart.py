@@ -55,7 +55,7 @@ def main():
     compiled = flow.run(targets=("jax",))
     ref_logits = compiled.executables["jax"](x)
     print("compiled graph:", [n.op for n in compiled.graph.topo_order()],
-          f"| max |delta| vs model = "
+          "| max |delta| vs model = "
           f"{float(jnp.max(jnp.abs(ref_logits - model_logits))):.2e}")
 
     # 3. D16-W8 streaming accelerator (Pallas line-buffer conv actors) with
@@ -63,7 +63,7 @@ def main():
     res = flow.run(targets=("stream",), dtconfig=DatatypeConfig(16, 8),
                    calib_inputs=(x,), fifo_slack=args.fifo_slack)
     q_logits = res.executables["stream"](x)
-    print(f"D16-W8 stream target: max |delta| vs float = "
+    print("D16-W8 stream target: max |delta| vs float = "
           f"{float(jnp.max(jnp.abs(q_logits - ref_logits))):.4f}, "
           f"zero weights = {100 * res.stats['zero_weight_frac']:.1f}%")
     topo = res.writers["stream"].topology()

@@ -1,7 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 test entry point — one command locally and in CI.
 #   scripts/test.sh [extra pytest args]
+#   TIER1_ARGS="-k scheduler" scripts/test.sh
+# Forces the CPU backend so local GPU/TPU machines and CI runners execute
+# the identical numerical path (batch-coalescing differential tests assert
+# ulp-level agreement).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+export JAX_PLATFORMS=cpu
+exec python -m pytest -x -q ${TIER1_ARGS:-} "$@"

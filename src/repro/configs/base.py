@@ -7,9 +7,7 @@ configs are exercised structurally via the dry-run.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 VOCAB_PAD_MULTIPLE = 256  # vocab padded so embedding tables shard 16-way cleanly

@@ -2,7 +2,7 @@
 (conv + maxpool + batchnorm + relu) followed by 1 fully connected layer,
 classifying 28x28 MNIST digits into 10 classes.
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 

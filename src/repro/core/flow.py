@@ -52,6 +52,24 @@ class FlowResult:
     # leading-dim size via an LRU of traced shapes
     batched: Dict[str, BatchedExecutable] = field(default_factory=dict)
 
+    def serve(self, target: str = "jax", **kwargs):
+        """A batch-coalescing :class:`~repro.runtime.serve.AccelServer` over
+        this result's batched artifact for ``target`` — requests of varying
+        sizes are queued, packed to buckets aligned with the artifact's LRU,
+        executed once per batch and demuxed.  Keyword arguments (``max_batch``,
+        ``max_wait``, ``buckets``, ``policy``, ``point_executables``, ...)
+        pass through to the server."""
+        from repro.runtime.serve import AccelServer   # lazy: runtime is heavy
+        if target not in self.batched:
+            raise KeyError(f"no batched artifact for target {target!r}; "
+                           f"have {tuple(self.batched)}")
+        # the graph knows its true input spec — lock request coalescing to it
+        # rather than to whatever the first submitted request looks like
+        kwargs.setdefault("signature", tuple(
+            (tuple(int(d) for d in t.shape[1:]), str(t.dtype))
+            for t in self.graph.inputs))
+        return AccelServer(self.batched[target], **kwargs)
+
 
 def _split_precision(dtconfig: Optional[Precision]
                      ) -> Tuple[Optional[DatatypeConfig], int, int]:

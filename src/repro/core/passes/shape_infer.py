@@ -119,7 +119,7 @@ def _shape_reshape(node: Node, ins: List[Shape]) -> List[Shape]:
             if static_elems(ins[0]) != known:
                 raise ValueError(
                     f"node {node.name}: reshape of a batch-polymorphic tensor "
-                    f"must keep the per-item volume in concrete dims "
+                    "must keep the per-item volume in concrete dims "
                     f"({static_elems(ins[0])} != {known})")
             target[target.index(-1)] = BATCH
         else:
@@ -133,7 +133,7 @@ def _shape_split(node: Node, ins: List[Shape]) -> List[Shape]:
     axis = node.attrs.get("axis", -1)
     if is_symbolic(x[axis]):
         raise ValueError(f"node {node.name}: cannot Split the symbolic "
-                         f"batch dim")
+                         "batch dim")
     x[axis] = x[axis] // len(node.outputs)
     return [tuple(x)] * len(node.outputs)
 

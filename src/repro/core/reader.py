@@ -45,7 +45,6 @@ def cnn_to_ir(cfg: CNNConfig, params: Dict[str, np.ndarray],
     nodes = []
     inits: Dict[str, np.ndarray] = {}
     x = "input"
-    cin = cfg.in_channels
     for i, cout in enumerate(cfg.conv_channels):
         wname, bname = f"conv{i}/w", f"conv{i}/b"
         inits[wname] = np.asarray(params[wname])
@@ -63,7 +62,6 @@ def cnn_to_ir(cfg: CNNConfig, params: Dict[str, np.ndarray],
                           {"epsilon": 1e-5}))
         nodes.append(Node("Relu", f"relu{i}", [f"bn{i}_out"], [f"relu{i}_out"]))
         x = f"relu{i}_out"
-        cin = cout
         h, w = h // cfg.pool, w // cfg.pool
     nodes.append(Node("Flatten", "flatten", [x], ["flat"]))
     inits["fc/w"] = np.asarray(params["fc/w"])

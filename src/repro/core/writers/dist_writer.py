@@ -55,7 +55,7 @@ class DistWriter(JaxWriter):
             elif has_symbolic(t.shape):
                 raise ValueError(
                     f"input {t.name!r} has a symbolic batch dim; pass "
-                    f"batch= to lower_compile (or use build_batched)")
+                    "batch= to lower_compile (or use build_batched)")
             else:
                 shape = tuple(t.shape)
             args.append(jax.ShapeDtypeStruct(shape, jnp.dtype(t.dtype)))
@@ -64,7 +64,9 @@ class DistWriter(JaxWriter):
         return lowered, compiled
 
     def build_batched(self, mesh: Optional[Mesh] = None,
-                      max_entries: int = 8) -> BatchedExecutable:
+                      max_entries: int = 8,
+                      on_compile: Optional[Callable] = None
+                      ) -> BatchedExecutable:
         """Batch-polymorphic SPMD artifact: LRU of per-batch AOT-compiled
         executables on ``mesh`` (without a mesh, falls back to the plain
         single-device batched executable).
@@ -75,7 +77,8 @@ class DistWriter(JaxWriter):
         running the padded remainder.
         """
         if mesh is None:
-            return super().build_batched(max_entries=max_entries)
+            return super().build_batched(max_entries=max_entries,
+                                         on_compile=on_compile)
         from repro.sharding import dp_size
         dp = dp_size(mesh)
 
@@ -98,4 +101,4 @@ class DistWriter(JaxWriter):
             return run_padded
 
         return BatchedExecutable(self.build(), max_entries=max_entries,
-                                 compile_fn=compile_for)
+                                 compile_fn=compile_for, on_compile=on_compile)

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from repro.core.ir import Graph, Node
 from repro.core.writers.registry import OP_REGISTRY, registered_ops, resolve
 from repro.quant.fixedpoint import fake_quant
-from repro.quant.qtypes import DatatypeConfig, QType, fixed_for_range
+from repro.quant.qtypes import DatatypeConfig, fixed_for_range
 from repro.quant.ptq import effective_weight_dt, weight_qtype
 
 # Backward-compatible alias: the reference op table (live view of the "jax"
@@ -54,7 +54,8 @@ class BatchedExecutable:
     """
 
     def __init__(self, fn: Callable, max_entries: int = 8,
-                 compile_fn: Optional[Callable[[Signature], Callable]] = None):
+                 compile_fn: Optional[Callable[[Signature], Callable]] = None,
+                 on_compile: Optional[Callable[[Signature], None]] = None):
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
         self._fn = fn
@@ -63,6 +64,9 @@ class BatchedExecutable:
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        # serving telemetry hook: called with the signature on every trace
+        # miss (a scheduler can count retraces per bucket / alert on churn)
+        self.on_compile = on_compile
 
     @staticmethod
     def signature(*inputs) -> Signature:
@@ -75,6 +79,8 @@ class BatchedExecutable:
         exe = self._cache.get(sig)
         if exe is None:
             self.misses += 1
+            if self.on_compile is not None:
+                self.on_compile(sig)
             exe = self._compile(sig)
             self._cache[sig] = exe
             while len(self._cache) > self.max_entries:
@@ -95,6 +101,22 @@ class BatchedExecutable:
     def cached_batches(self) -> Tuple[int, ...]:
         """Leading-dim sizes currently resident (serving telemetry)."""
         return tuple(sig[0][0][0] for sig in self._cache if sig and sig[0][0])
+
+    def has_batch(self, batch: int) -> bool:
+        """True when a trace for this leading-dim size is resident — the
+        scheduler's bucket policy prefers such sizes (hit beats retrace)."""
+        return batch in self.cached_batches
+
+    def telemetry(self) -> Dict[str, Any]:
+        """Hit/miss counters + resident traces, for serving dashboards."""
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "cached_batches": self.cached_batches,
+            "capacity": self.max_entries,
+        }
 
 
 class JaxWriter:
@@ -172,7 +194,11 @@ class JaxWriter:
     def build_jit(self) -> Callable:
         return jax.jit(self.build())
 
-    def build_batched(self, max_entries: int = 8) -> BatchedExecutable:
+    def build_batched(self, max_entries: int = 8,
+                      on_compile: Optional[Callable] = None
+                      ) -> BatchedExecutable:
         """Batch-polymorphic executable: one artifact, any leading-dim size,
-        LRU of per-signature traces (see :class:`BatchedExecutable`)."""
-        return BatchedExecutable(self.build(), max_entries=max_entries)
+        LRU of per-signature traces (see :class:`BatchedExecutable`);
+        ``on_compile`` observes every trace miss (serving telemetry)."""
+        return BatchedExecutable(self.build(), max_entries=max_entries,
+                                 on_compile=on_compile)

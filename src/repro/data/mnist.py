@@ -54,7 +54,7 @@ def make_dataset(n: int, seed: int = 0):
     """Returns (images (n, 28, 28, 1) f32, labels (n,) i32)."""
     rng = np.random.default_rng(seed)
     labels = rng.integers(0, 10, n).astype(np.int32)
-    imgs = np.stack([_render(int(l), rng) for l in labels])[..., None]
+    imgs = np.stack([_render(int(lab), rng) for lab in labels])[..., None]
     return imgs.astype(np.float32), labels
 
 

@@ -10,7 +10,7 @@ with short-range structure so LM losses are non-trivially learnable.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -38,12 +38,12 @@ def ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, fin_ref,
     D = d_ref[0, 0].astype(jnp.float32)
 
     dA = dt * A                               # (Q,) decays (<= 0)
-    l = jnp.cumsum(dA)                        # cumulative log decay
-    l_last = l[Q - 1]
+    ld = jnp.cumsum(dA)                       # cumulative log decay
+    l_last = ld[Q - 1]
 
     # intra-chunk: att[i,j] = (C_i.B_j) * exp(l_i - l_j) * dt_j for j <= i
-    li = l[:, None]
-    lj = l[None, :]
+    li = ld[:, None]
+    lj = ld[None, :]
     decay = jnp.exp(jnp.minimum(li - lj, 0.0))
     cb = jax.lax.dot(Cm, Bm.T, preferred_element_type=jnp.float32)
     iota = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
@@ -52,11 +52,11 @@ def ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, fin_ref,
     y = jax.lax.dot(att, x, preferred_element_type=jnp.float32)
 
     # inter-chunk: y_i += C_i . (exp(l_i) * state_prev)
-    y += jax.lax.dot(Cm * jnp.exp(l)[:, None], state_ref[...],
+    y += jax.lax.dot(Cm * jnp.exp(ld)[:, None], state_ref[...],
                      preferred_element_type=jnp.float32)
 
     # state update: S <- S*exp(l_last) + sum_j exp(l_last-l_j) dt_j B_j x_j^T
-    wj = jnp.exp(l_last - l) * dt             # (Q,)
+    wj = jnp.exp(l_last - ld) * dt            # (Q,)
     s_new = jax.lax.dot((Bm * wj[:, None]).T, x,
                         preferred_element_type=jnp.float32)  # (N, P)
     state_ref[...] = state_ref[...] * jnp.exp(l_last) + s_new

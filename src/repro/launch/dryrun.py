@@ -85,7 +85,6 @@ def _lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
             qparams, q_sh = {}, {}
             base_sh = S.param_sharding_for(cfg, params, mesh)
             for k, v in params.items():
-                proto = jnp.zeros((), v.dtype)
                 if is_quantizable(k, jax.ShapeDtypeStruct(v.shape, v.dtype)) \
                         and not k.startswith(("embed/", "lm_head/")):
                     qparams[k] = jax.ShapeDtypeStruct(v.shape, store)
@@ -111,7 +110,9 @@ def _lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
                 return out
         else:
             qparams, q_sh = params, S.param_sharding_for(cfg, params, mesh)
-            dequant_params = lambda p: p
+
+            def dequant_params(p):
+                return p
         if shape.kind == "prefill":
             batch = S.input_specs(cfg, shape)
             b_sh = S.batch_sharding(batch, mesh)

@@ -14,7 +14,7 @@ from __future__ import annotations
 import re
 from collections import Counter
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 PEAK_FLOPS_BF16 = 197e12
 PEAK_FLOPS_INT8 = 394e12

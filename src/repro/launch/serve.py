@@ -10,7 +10,6 @@ budget drains over the run and the RuntimePolicy drops the working point
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp

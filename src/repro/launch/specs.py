@@ -9,7 +9,7 @@ allocation); ``cell_specs`` packages everything jit.lower needs per cell kind:
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +19,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import encdec, transformer
 from repro.models.params import abstract_params
 from repro.optim.adamw import OptState
-from repro.runtime.train import TrainState, state_shardings
+from repro.runtime.train import TrainState
 from repro.sharding import batch_axes, dp_size, param_sharding
 
 

@@ -12,11 +12,8 @@ without it the full config and the 16x16 production mesh are used (TPU pod).
 from __future__ import annotations
 
 import argparse
-import os
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -25,8 +22,7 @@ from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models.params import init_params
 from repro.optim.adamw import OptConfig
 from repro.runtime import ft
-from repro.runtime.train import (TrainState, init_train_state, jit_train_step,
-                                 make_train_step, state_shardings)
+from repro.runtime.train import init_train_state, make_train_step
 
 
 def main() -> None:
@@ -66,7 +62,6 @@ def main() -> None:
     step = make_train_step(cfg, opt_cfg, mesh=mesh, tp_total=tp_total,
                            remat=True, grad_compress=args.grad_compress,
                            microbatches=args.microbatches)
-    st_sh = state_shardings(cfg, state, mesh)
     with mesh:
         step = jax.jit(step, donate_argnums=(0,))
         result = ft.run_training(

@@ -7,14 +7,14 @@ decoder to encoder output.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
-from repro.models.attention import LayerAttnParams, attention, decode_attention
+from repro.models.attention import attention, decode_attention
 from repro.models.common import embed_lookup, norm, unembed
 from repro.models.transformer import _attn_params, _mlp, layer_tree
 

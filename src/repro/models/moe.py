@@ -14,7 +14,6 @@ dynamic-slices per local expert).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax

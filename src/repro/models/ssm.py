@@ -8,7 +8,7 @@ module is the pure-jnp reference used by the models and the kernel oracle.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -72,7 +72,9 @@ def ssd_chunked(x, dt, A, Bm, C, D, chunk: int, init_state=None):
         # zero-pad to a chunk multiple: dt=0 rows neither update the state
         # (dt_j factor) nor decay it (exp(0)=1), so padding is exact
         pad = chunk - S % chunk
-        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        def zf(a):
+            return jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+
         x, dt, Bm, C = zf(x), zf(dt), zf(Bm), zf(C)
         S = S + pad
     nc = S // chunk
@@ -84,15 +86,15 @@ def ssd_chunked(x, dt, A, Bm, C, D, chunk: int, init_state=None):
     Cc = jnp.repeat(C.reshape(Bsz, nc, chunk, G, N), rep, axis=3)
 
     dA = dtc * A[None, None, None, :]                                # (B,nc,Q,H) <= 0
-    l = jnp.cumsum(dA, axis=2)                                       # cumulative log-decay
-    l_last = l[:, :, -1:, :]                                         # (B,nc,1,H)
+    ld = jnp.cumsum(dA, axis=2)                                      # cumulative log-decay
+    l_last = ld[:, :, -1:, :]                                        # (B,nc,1,H)
 
     # intra-chunk: att[i,j] = (C_i . B_j) * exp(l_i - l_j) * dt_j,  j <= i
     from repro.perf import FLAGS
     idt = jnp.bfloat16 if (FLAGS.ssd_bf16_intra
                            and x.dtype == jnp.bfloat16) else jnp.float32
-    li = l[:, :, :, None, :]                                         # (B,nc,Q,1,H)
-    lj = l[:, :, None, :, :]                                         # (B,nc,1,Q,H)
+    li = ld[:, :, :, None, :]                                        # (B,nc,Q,1,H)
+    lj = ld[:, :, None, :, :]                                        # (B,nc,1,Q,H)
     decay = jnp.exp(jnp.minimum(li - lj, 0.0)).astype(idt)           # mask j>i later
     cb = jnp.einsum("bcqhn,bckhn->bcqkh", Cc.astype(idt), Bc.astype(idt))
     causal = jnp.tril(jnp.ones((chunk, chunk), bool))
@@ -102,7 +104,7 @@ def ssd_chunked(x, dt, A, Bm, C, D, chunk: int, init_state=None):
                          ).astype(jnp.float32)
 
     # chunk summaries: S_c = sum_j exp(l_last - l_j) dt_j B_j x_j^T   (B,nc,H,N,P)
-    w_j = jnp.exp(l_last - l) * dtc                                  # (B,nc,Q,H)
+    w_j = jnp.exp(l_last - ld) * dtc                                 # (B,nc,Q,H)
     S_c = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", w_j, Bc.astype(jnp.float32),
                      xc.astype(jnp.float32))
 
@@ -122,7 +124,7 @@ def ssd_chunked(x, dt, A, Bm, C, D, chunk: int, init_state=None):
 
     # inter-chunk contribution: y_i += C_i . (exp(l_i) * state_prefix)
     y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", Cc.astype(jnp.float32) *
-                         jnp.exp(l)[..., None], s_prefix)
+                         jnp.exp(ld)[..., None], s_prefix)
 
     y = (y_intra + y_inter).reshape(Bsz, S, H, Pd)
     y = y + x.astype(jnp.float32) * D[None, None, :, None]

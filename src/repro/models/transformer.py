@@ -6,15 +6,13 @@ rematerialized (``remat=True``) for the training memory term.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
-from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
 from repro.models.attention import LayerAttnParams, attention, cache_size, decode_attention
 from repro.models.common import embed_lookup, norm, swiglu, gelu, unembed

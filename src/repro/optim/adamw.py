@@ -4,9 +4,8 @@ Flat-dict pytrees throughout (matches repro.models.params).  Moments are
 sharded ZeRO-1 style by the runtime (sharding.opt_state_spec)."""
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

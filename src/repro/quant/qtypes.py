@@ -12,7 +12,7 @@ Two regimes (DESIGN.md §2):
 from __future__ import annotations
 
 from dataclasses import dataclass, field as dataclasses_field
-from typing import Mapping, Optional
+from typing import Optional
 
 import jax.numpy as jnp
 

@@ -1,0 +1,293 @@
+"""Batch-coalescing request scheduler for the accelerator serving runtime.
+
+One compiled streaming accelerator serves an evolving request stream (the
+paper's CPS story): requests of varying leading-dim sizes arrive
+asynchronously, and the scheduler packs them into batches executed through a
+batch-polymorphic :class:`~repro.core.writers.jax_writer.BatchedExecutable`.
+
+Three cooperating pieces:
+
+* :class:`CoalescingScheduler` — a bounded FIFO request queue plus the packing
+  rule: pop requests in arrival order while the running total stays within
+  ``max_batch``; flush when the packed batch is as full as it can get, when
+  the oldest request has waited ``max_wait`` seconds, or on an explicit
+  flush.  The clock is injected so tests drive time deterministically.
+* :class:`BucketPolicy` — maps a packed size to the leading-dim size actually
+  executed.  Candidate sizes come from a bucket ladder (powers of two up to
+  ``max_batch`` by default) so the jit cache stays small, but a size already
+  resident in the executable's LRU is preferred whenever it pads no worse
+  than the ladder bucket — tracing is far more expensive than padding.
+* :class:`ScheduledBatch` — the unit handed to the executor: member requests
+  in arrival order, the bucket to pad to, and the batch budget (the most
+  constrained member, so the precision policy never over-serves a request).
+
+The scheduler never touches arrays; splitting, padding and demux live in the
+executor (:class:`repro.runtime.serve.AccelServer`).
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import (
+    Any,
+    Callable,
+    Collection,
+    Deque,
+    Iterator,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
+
+
+class QueueFull(RuntimeError):
+    """The bounded request queue rejected a submission (backpressure)."""
+
+
+# per-input (trailing shape, dtype) pairs — what must agree for requests to
+# share a padded batch column
+RequestSignature = Tuple[Tuple[Tuple[int, ...], str], ...]
+
+
+def request_signature(inputs: Sequence[Any]) -> RequestSignature:
+    return tuple((tuple(int(d) for d in x.shape[1:]), str(x.dtype)) for x in inputs)
+
+
+def percentile(samples: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 1]) — the one convention shared by
+    server stats and the throughput benchmark."""
+    if not samples:
+        raise ValueError("percentile of no samples")
+    ordered = sorted(samples)
+    return ordered[min(len(ordered) - 1, int(round(q * (len(ordered) - 1))))]
+
+
+@dataclass
+class Request:
+    """One inference request: a tuple of arrays sharing the leading dim."""
+
+    rid: int
+    inputs: Tuple[Any, ...]
+    size: int
+    arrival: float
+    budget: float = 1.0
+
+
+@dataclass
+class ScheduledBatch:
+    """A packed group of requests plus the bucket they execute at."""
+
+    requests: List[Request]
+    bucket: int
+
+    @property
+    def size(self) -> int:
+        """Total useful rows (sum of member request sizes)."""
+        return sum(r.size for r in self.requests)
+
+    @property
+    def padding(self) -> int:
+        """Zero rows appended to reach the bucket (wasted work)."""
+        return self.bucket - self.size
+
+    @property
+    def budget(self) -> float:
+        """Batch energy budget: the most constrained member's budget."""
+        return min(r.budget for r in self.requests)
+
+
+def _pow2_ladder(max_batch: int) -> Tuple[int, ...]:
+    out = []
+    b = 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+class BucketPolicy:
+    """Choose the executed leading-dim size for a packed request group.
+
+    ``buckets`` is the ladder of sizes worth owning a trace for (default:
+    powers of two capped at ``max_batch``).  ``bucket_for`` returns the
+    smallest ladder bucket that fits — unless the executable's LRU already
+    holds a traced size that fits with no more padding than that ladder
+    bucket, in which case the cached size wins (a cache hit costs a few
+    padded rows; a miss costs a fresh trace and may evict a hot one).
+    """
+
+    def __init__(self, buckets: Optional[Sequence[int]] = None, max_batch: int = 8):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        ladder = tuple(sorted(set(buckets))) if buckets else _pow2_ladder(max_batch)
+        if any(b < 1 for b in ladder):
+            raise ValueError(f"buckets must be positive, got {ladder}")
+        if ladder[-1] > max_batch:
+            # packed totals never exceed max_batch, so a larger bucket would
+            # only ever add silent padding waste
+            raise ValueError(f"buckets {ladder} exceed max_batch {max_batch}")
+        if ladder[-1] < max_batch:
+            ladder = ladder + (max_batch,)
+        self.buckets = ladder
+
+    def ladder_bucket(self, size: int) -> int:
+        """Smallest configured bucket that fits ``size``."""
+        for b in self.buckets:
+            if b >= size:
+                return b
+        return size  # size exceeds the ladder: execute at exact size
+
+    def bucket_for(self, size: int, cached: Collection[int] = ()) -> int:
+        """Executed size for a packed total of ``size`` rows, preferring
+        already-traced sizes in ``cached`` that pad no worse than the
+        ladder."""
+        ladder = self.ladder_bucket(size)
+        fits = [c for c in cached if size <= c <= ladder]
+        return min(fits) if fits else ladder
+
+
+class CoalescingScheduler:
+    """Bounded FIFO queue + continuous-batching packing rule.
+
+    Requests are packed strictly in arrival order (no reordering, so no
+    starvation): a batch closes when adding the next request would overflow
+    ``max_batch``, when it reaches ``max_batch`` exactly, when the oldest
+    member has waited ``max_wait`` seconds, or on an explicit flush.  The
+    clock is injected (``clock=FakeClock()`` in tests) and only ever read —
+    the scheduler never sleeps; the serving loop decides when to poll.
+    """
+
+    def __init__(
+        self,
+        max_batch: int = 8,
+        max_wait: float = 0.005,
+        queue_depth: int = 1024,
+        buckets: Optional[Sequence[int]] = None,
+        clock: Callable[[], float] = time.monotonic,
+        signature: Optional[RequestSignature] = None,
+    ):
+        if queue_depth < 1:
+            raise ValueError("queue_depth must be >= 1")
+        self.policy = BucketPolicy(buckets, max_batch)
+        self.max_batch = max_batch
+        self.max_wait = max_wait
+        self.queue_depth = queue_depth
+        self.clock = clock
+        self._queue: Deque[Request] = deque()
+        self._rids = itertools.count()
+        # the signature every request must match to coalesce: taken from the
+        # served artifact when provided (FlowResult.serve passes the graph's
+        # input spec), else locked in by the first submission — the artifact
+        # form is safer, since a malformed first request cannot poison the
+        # lock for everyone after it
+        self._sig = signature
+        self._sig_source = "served artifact's" if signature else None
+        # telemetry
+        self.submitted = 0
+        self.scheduled = 0
+        self.scheduled_rows = 0
+        self.padded_rows = 0
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending_rows(self) -> int:
+        return sum(r.size for r in self._queue)
+
+    def submit(self, inputs: Sequence[Any], budget: float = 1.0) -> Request:
+        """Enqueue one request (a tuple of arrays sharing the leading dim)."""
+        inputs = tuple(inputs)
+        if not inputs:
+            raise ValueError("request has no inputs")
+        sizes = {int(x.shape[0]) for x in inputs}
+        if len(sizes) != 1:
+            raise ValueError(f"request inputs disagree on leading dim: {sizes}")
+        size = sizes.pop()
+        if size < 1:
+            raise ValueError("request leading dim must be >= 1")
+        if size > self.max_batch:
+            raise ValueError(
+                f"request size {size} exceeds max_batch {self.max_batch}; "
+                "split it before submitting"
+            )
+        sig = request_signature(inputs)
+        if self._sig is None:
+            self._sig = sig
+            self._sig_source = "first submitted request's"
+        elif sig != self._sig:
+            # arity / trailing-shape / dtype mismatches cannot share a padded
+            # column; rejecting here keeps a bad request from poisoning the
+            # batch it would have coalesced into
+            raise ValueError(
+                f"request signature {sig} does not match the "
+                f"{self._sig_source} {self._sig}"
+            )
+        if len(self._queue) >= self.queue_depth:
+            raise QueueFull(
+                f"queue_depth {self.queue_depth} reached; retry after a pump"
+            )
+        req = Request(next(self._rids), inputs, size, self.clock(), budget)
+        self._queue.append(req)
+        self.submitted += 1
+        return req
+
+    def _packable(self) -> Tuple[int, int]:
+        """(#requests, total rows) the head of the queue packs into."""
+        total = take = 0
+        for r in self._queue:
+            if total + r.size > self.max_batch:
+                break
+            total += r.size
+            take += 1
+        return take, total
+
+    def ready(
+        self, cached: Collection[int] = (), flush: bool = False
+    ) -> Optional[ScheduledBatch]:
+        """Pop the next executable batch, or None to keep waiting.
+
+        ``cached`` is the executable's set of already-traced leading-dim
+        sizes (see ``BatchedExecutable.cached_batches``), consulted by the
+        bucket policy.
+        """
+        if not self._queue:
+            return None
+        take, total = self._packable()
+        full = total == self.max_batch or take < len(self._queue)
+        waited = self.clock() - self._queue[0].arrival
+        if not (full or flush or waited >= self.max_wait):
+            return None
+        reqs = [self._queue.popleft() for _ in range(take)]
+        batch = ScheduledBatch(reqs, self.policy.bucket_for(total, cached))
+        self.scheduled += 1
+        self.scheduled_rows += batch.size
+        self.padded_rows += batch.padding
+        return batch
+
+    def drain(
+        self, cached: Collection[int] = (), flush: bool = True
+    ) -> Iterator[ScheduledBatch]:
+        """Yield batches while the queue has something ready."""
+        while True:
+            batch = self.ready(cached, flush=flush)
+            if batch is None:
+                return
+            yield batch
+
+    def stats(self) -> dict:
+        rows = self.scheduled_rows + self.padded_rows
+        return {
+            "submitted": self.submitted,
+            "scheduled_batches": self.scheduled,
+            "scheduled_rows": self.scheduled_rows,
+            "padded_rows": self.padded_rows,
+            "padding_waste": self.padded_rows / rows if rows else 0.0,
+            "pending": len(self._queue),
+        }

@@ -1,17 +1,27 @@
-"""Serving runtime: prefill/decode steps + the adaptive mixed-precision server.
+"""Serving runtime: prefill/decode steps, the adaptive mixed-precision LM
+server, and the batch-coalescing accelerator server.
 
-The adaptive server is the paper's CPS story at pod scale (DESIGN.md §7): one
-int8 master weight buffer, per-request-batch working-point selection driven by
-an energy/SLA policy — switching precision costs no weight reload.
+The adaptive LM server is the paper's CPS story at pod scale (DESIGN.md §7):
+one int8 master weight buffer, per-request-batch working-point selection
+driven by an energy/SLA policy — switching precision costs no weight reload.
+:class:`AccelServer` brings the same story to the graph-flow accelerators:
+asynchronously arriving requests of varying sizes are coalesced into padded
+bucket-sized batches executed through one batch-polymorphic artifact
+(:class:`~repro.core.writers.jax_writer.BatchedExecutable`), with an optional
+:class:`~repro.core.adaptive.RuntimePolicy` selecting a precision working
+point per scheduled batch.
 """
 from __future__ import annotations
 
-import functools
+import time
+from collections import Counter, deque
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -19,7 +29,16 @@ from repro.core.adaptive import RuntimePolicy, WorkingPoint
 from repro.models import encdec, transformer
 from repro.quant.ptq import QuantizedParams, dequantize_tree, quantize_tree_native
 from repro.runtime import model_api
+from repro.runtime.scheduler import (CoalescingScheduler, QueueFull,
+                                     RequestSignature, ScheduledBatch,
+                                     percentile)
 from repro.sharding import batch_axes
+
+__all__ = [
+    "AccelServer", "AdaptiveLMServer", "BatchReport", "QueueFull",
+    "ServeMetrics", "decode_state_shardings", "greedy_generate",
+    "make_decode_step", "make_prefill_step",
+]
 
 
 def decode_state_shardings(cfg: ModelConfig, state, mesh: Mesh):
@@ -149,3 +168,205 @@ class AdaptiveLMServer:
         # energy model: pJ/byte HBM + pJ/flop (roofline constants)
         metrics = ServeMetrics(pt.name, wbytes, wbytes * 2.0e-6)
         return logits, state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Batch-coalescing accelerator server (continuous batching over the flow)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _BatchFailure:
+    """Stored per ticket when its batch's executable raised: the ticket
+    resolves to an error instead of silently disappearing."""
+    error: Exception
+
+
+@dataclass
+class BatchReport:
+    """Telemetry for one executed batch."""
+    bucket: int          # leading-dim size actually executed (after padding)
+    rows: int            # useful rows (sum of member request sizes)
+    padding: int         # zero rows appended to reach the bucket
+    requests: int        # member request count
+    point: Optional[str]  # precision working point, if a policy is attached
+
+
+class AccelServer:
+    """Batch-coalescing serving front-end over a batch-polymorphic artifact.
+
+    Wires a :class:`~repro.runtime.scheduler.CoalescingScheduler` (bounded
+    queue, FIFO packing up to ``max_batch``, ``max_wait`` flush, bucket
+    selection against the executable's LRU) to a
+    :class:`~repro.core.writers.jax_writer.BatchedExecutable` (or any
+    callable, e.g. ``DistWriter.build_batched(mesh)`` for the SPMD path).
+    Member inputs are concatenated along the leading dim, zero-padded up to
+    the chosen bucket, executed once, and the outputs sliced back
+    per request — coalescing is invisible to callers.
+
+    When a :class:`~repro.core.adaptive.RuntimePolicy` is attached, every
+    scheduled batch selects a precision working point from the batch budget
+    (the most constrained member); ``point_executables`` maps point names to
+    per-point executables sharing one weight substrate (the paper's
+    no-weight-reload precision switch).
+    """
+
+    def __init__(self, executable: Callable, *,
+                 max_batch: int = 8, max_wait: float = 0.005,
+                 queue_depth: int = 1024,
+                 buckets: Optional[Sequence[int]] = None,
+                 policy: Optional[RuntimePolicy] = None,
+                 point_executables: Optional[Dict[str, Callable]] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 history: int = 4096,
+                 signature: Optional[RequestSignature] = None):
+        self.executable = executable
+        self.scheduler = CoalescingScheduler(
+            max_batch=max_batch, max_wait=max_wait, queue_depth=queue_depth,
+            buckets=buckets, clock=clock, signature=signature)
+        self.policy = policy
+        self.point_executables = dict(point_executables or {})
+        self.clock = clock
+        self._results: Dict[int, Any] = {}
+        self._dropped: set = set()
+        # bounded telemetry windows: a long-running server keeps the last
+        # ``history`` entries, not one record per request forever (the
+        # scheduler's totals stay cumulative)
+        self.reports: Deque[BatchReport] = deque(maxlen=history)
+        self.latencies: Deque[float] = deque(maxlen=history)
+        self.executed_batches = 0
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, *inputs, budget: float = 1.0) -> int:
+        """Enqueue one request; returns the ticket for :meth:`result`."""
+        return self.scheduler.submit(inputs, budget=budget).rid
+
+    def _executables(self) -> List[Callable]:
+        uniq, seen = [], set()
+        for exe in (self.executable, *self.point_executables.values()):
+            if id(exe) not in seen:
+                seen.add(id(exe))
+                uniq.append(exe)
+        return uniq
+
+    def _cached(self) -> Tuple[int, ...]:
+        """Union of traced leading-dim sizes across the default and every
+        per-point executable (the bucket is chosen before the point is)."""
+        sizes = set()
+        for exe in self._executables():
+            sizes.update(getattr(exe, "cached_batches", ()))
+        return tuple(sorted(sizes))
+
+    def _execute(self, batch: ScheduledBatch) -> None:
+        exe, point = self.executable, None
+        if self.policy is not None:
+            pt = self.policy.select(batch.budget)
+            point = pt.name
+            exe = self.point_executables.get(pt.name, exe)
+        # batch assembly and demux stay on the host: jnp.concatenate /
+        # per-slice demux would XLA-compile a fresh kernel per distinct
+        # request-shape combination, which dwarfs the accelerator call on a
+        # varied stream (one compiled graph per bucket is the whole point)
+        cols = []
+        for j in range(len(batch.requests[0].inputs)):
+            parts = [np.asarray(r.inputs[j]) for r in batch.requests]
+            col = np.zeros((batch.bucket, *parts[0].shape[1:]),
+                           parts[0].dtype)
+            off = 0
+            for p in parts:
+                col[off:off + p.shape[0]] = p
+                off += p.shape[0]
+            cols.append(col)
+        try:
+            out = exe(*cols)
+            multi = isinstance(out, tuple)
+            outs = tuple(np.asarray(o) for o in (out if multi else (out,)))
+        except Exception as e:
+            # resolve every member ticket to an error before propagating —
+            # the requests already left the queue, and losing them would
+            # leave their result() callers waiting on tickets that can
+            # never be served
+            for r in batch.requests:
+                if r.rid in self._dropped:
+                    self._dropped.discard(r.rid)
+                else:
+                    self._results[r.rid] = _BatchFailure(e)
+            raise
+        off, done = 0, self.clock()
+        for r in batch.requests:
+            sliced = tuple(o[off:off + r.size] for o in outs)
+            if r.rid in self._dropped:
+                self._dropped.discard(r.rid)   # abandoned pre-execution
+            else:
+                self._results[r.rid] = sliced if multi else sliced[0]
+                self.latencies.append(done - r.arrival)
+            off += r.size
+        self.executed_batches += 1
+        self.reports.append(BatchReport(batch.bucket, batch.size,
+                                        batch.padding, len(batch.requests),
+                                        point))
+
+    def pump(self, flush: bool = False) -> int:
+        """Execute every batch the scheduler deems ready; ``flush=True``
+        forces out a partial batch (used on stream end / result demand).
+        Returns the number of batches executed."""
+        n = 0
+        for batch in self.scheduler.drain(self._cached(), flush=flush):
+            self._execute(batch)
+            n += 1
+        return n
+
+    def result(self, ticket: int):
+        """The output rows for ``ticket`` (flushes if still queued).
+
+        Results are single-consumption: each ticket must be claimed exactly
+        once (or released with :meth:`drop`), else its output stays resident.
+        """
+        if ticket not in self._results:
+            try:
+                self.pump(flush=True)
+            except Exception:
+                # the pump's batch may have been ours: if our ticket was
+                # resolved (to a _BatchFailure) fall through and raise the
+                # per-ticket error; otherwise it was someone else's problem
+                if ticket not in self._results:
+                    raise
+        res = self._results.pop(ticket)
+        if isinstance(res, _BatchFailure):
+            raise RuntimeError(
+                f"batch execution failed for ticket {ticket}") from res.error
+        return res
+
+    def drop(self, ticket: int) -> None:
+        """Release an abandoned ticket (client gave up / timed out) so its
+        result does not stay resident forever — whether it already executed
+        or is still queued (the batch still runs; the output is discarded
+        at demux)."""
+        if self._results.pop(ticket, None) is None:
+            self._dropped.add(ticket)
+
+    def __call__(self, *inputs, budget: float = 1.0):
+        """Synchronous convenience: submit + flush + demux one request."""
+        return self.result(self.submit(*inputs, budget=budget))
+
+    # -- telemetry -----------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Scheduler counters + executable hit/miss telemetry + latency
+        percentiles and per-point batch counts (both over the last
+        ``history`` entries)."""
+        s = self.scheduler.stats()
+        tels = [exe.telemetry() for exe in self._executables()
+                if hasattr(exe, "telemetry")]
+        if tels:
+            hits = sum(t["hits"] for t in tels)
+            misses = sum(t["misses"] for t in tels)
+            s["hits"], s["misses"] = hits, misses
+            s["hit_rate"] = hits / (hits + misses) if hits + misses else 0.0
+            s["cached_batches"] = tuple(sorted(
+                {b for t in tels for b in t["cached_batches"]}))
+        if self.latencies:
+            s["p50_latency_s"] = percentile(self.latencies, 0.50)
+            s["p95_latency_s"] = percentile(self.latencies, 0.95)
+        s["executed_batches"] = self.executed_batches
+        s["points"] = dict(Counter(r.point for r in self.reports
+                                   if r.point is not None))
+        return s

@@ -6,7 +6,6 @@ gradient compression with error feedback (AC applied to the DP collective).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -10,7 +10,7 @@ tensors are constrained only on flattened dims and left to SPMD propagation othe
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -9,7 +9,6 @@ otherwise a pinned seed sweep runs the same property, so the suite is active
 even in minimal environments.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

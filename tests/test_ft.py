@@ -1,11 +1,9 @@
 """Fault tolerance: restart-equals-uninterrupted, straggler watchdog, elastic."""
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data.tokens import DataConfig
@@ -31,8 +29,8 @@ def test_restart_bit_identical_to_uninterrupted(tmp_path):
     steps = 12
     cfg, state, step, data = _setup(steps)
     # uninterrupted run
-    r1 = ft.run_training(step, state, data, steps, str(tmp_path / "a"),
-                         ckpt_every=4)
+    ft.run_training(step, state, data, steps, str(tmp_path / "a"),
+                    ckpt_every=4)
     # interrupted run: inject failures at steps 5 and 9
     r2 = ft.run_training(step, state, data, steps, str(tmp_path / "b"),
                          ckpt_every=4,

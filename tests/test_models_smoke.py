@@ -3,11 +3,9 @@ config, one forward + one train step + one decode step on CPU; asserts output
 shapes and no NaNs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
-from repro.data.tokens import DataConfig, batch_at
 from repro.models.params import count_params_analytic, init_params, param_shapes
 from repro.optim.adamw import OptConfig
 from repro.runtime import model_api

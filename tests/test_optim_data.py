@@ -4,8 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.tokens import DataConfig, TokenStream, batch_at
-from repro.optim.adamw import (OptConfig, apply_updates, global_norm,
-                               init_opt_state, schedule)
+from repro.optim.adamw import (OptConfig, apply_updates, init_opt_state,
+                               schedule)
 from repro.quant import gradcomp
 
 

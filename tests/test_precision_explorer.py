@@ -15,7 +15,7 @@ from repro.core.flow import DesignFlow
 from repro.core.passes import strip_precision
 from repro.core.reader import cnn_to_ir, mlp_to_ir
 from repro.core.writers.jax_writer import JaxWriter
-from repro.quant.qtypes import DatatypeConfig, PrecisionMap
+from repro.quant.qtypes import PrecisionMap
 
 TOL = 0.1
 SEED = 1234

@@ -9,16 +9,16 @@ from hypothesis import given, settings, strategies as st
 
 from repro.data.tokens import DataConfig, batch_at
 from repro.models.common import cross_entropy
-from repro.quant.fixedpoint import dequantize, fake_quant, quantize
+from repro.quant.fixedpoint import dequantize, quantize
 from repro.quant.pack import pack_int2, pack_int4, unpack_int2, unpack_int4
 from repro.quant.ptq import derive_view
-from repro.quant.qtypes import QType, fixed_for_range
+from repro.quant.qtypes import fixed_for_range
 
 SETTINGS = dict(max_examples=25, deadline=None)
 
 
 @given(st.lists(st.integers(-8, 7), min_size=2, max_size=64).filter(
-    lambda l: len(l) % 2 == 0))
+    lambda v: len(v) % 2 == 0))
 @settings(**SETTINGS)
 def test_pack4_roundtrip(codes):
     c = jnp.array(codes, jnp.int8).reshape(1, -1)
@@ -27,7 +27,7 @@ def test_pack4_roundtrip(codes):
 
 
 @given(st.lists(st.integers(-2, 1), min_size=4, max_size=64).filter(
-    lambda l: len(l) % 4 == 0))
+    lambda v: len(v) % 4 == 0))
 @settings(**SETTINGS)
 def test_pack2_roundtrip(codes):
     c = jnp.array(codes, jnp.int8).reshape(1, -1)

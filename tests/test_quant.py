@@ -1,14 +1,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.quant.fixedpoint import dequantize, fake_quant, quantize, zero_fraction
 from repro.quant.pack import pack_int2, pack_int4, unpack_int2, unpack_int4
-from repro.quant.ptq import (derive_view, dequant, dequantize_tree,
+from repro.quant.ptq import (derive_view, dequantize_tree,
                              quantize_tree_fixed, quantize_tree_native,
                              quant_memory_bytes)
-from repro.quant.qtypes import (QType, DatatypeConfig, TABLE2_POINTS,
+from repro.quant.qtypes import (QType, TABLE2_POINTS,
                                 fixed_for_range)
 
 
