@@ -7,6 +7,7 @@
   table2_mixed_precision  - Table II reproduction (Dx-Wy exploration)
   adaptive_switch         - MDC runtime-adaptivity benchmark
   serve_throughput        - coalesced vs naive per-request serving
+  qpath_latency           - fake-quant f32 vs packed-kernel execution path
   roofline                - §Roofline table aggregated from dry-run artifacts
 """
 from __future__ import annotations
@@ -36,8 +37,9 @@ def main() -> None:
             failures.append((name, repr(e)))
             traceback.print_exc()
 
-    from benchmarks import (adaptive_switch, roofline_table, serve_throughput,
-                            table1_frameworks, table2_mixed_precision)
+    from benchmarks import (adaptive_switch, qpath_latency, roofline_table,
+                            serve_throughput, table1_frameworks,
+                            table2_mixed_precision)
 
     section("table1_frameworks", lambda: [
         print("table1_frameworks," + ",".join(f"{k}={v}" for k, v in r.items()))
@@ -52,6 +54,9 @@ def main() -> None:
     section("serve_throughput", lambda: [
         print("serve_throughput," + ",".join(f"{k}={v}" for k, v in r.items()))
         for r in serve_throughput.run(full)])
+    section("qpath_latency", lambda: [
+        print("qpath_latency," + ",".join(f"{k}={v}" for k, v in r.items()))
+        for r in qpath_latency.run(full)])
     section("roofline", roofline_table.main)
 
     if failures:

@@ -108,6 +108,30 @@ class AdaptiveAccelerator:
         }
 
 
+def shared_point_executables(writer, points: Sequence[WorkingPoint], *,
+                             max_entries: int = 8,
+                             on_compile=None) -> Dict[str, Callable]:
+    """One batch-polymorphic executable per working point, ALL reading the
+    writer's single :class:`~repro.quant.pack.PackedWeights` buffer.
+
+    This is the MDC merge realized for the graph accelerators: the writer
+    (a :class:`~repro.core.writers.qjax_writer.QJaxWriter`) quantized its
+    weights once to int8 master codes, and each point executable differs only
+    in the static ``bits`` kernel argument — switching W8 -> W4 -> W2 in
+    ``AccelServer``/``RuntimePolicy`` re-builds nothing and copies no weights,
+    so N points hold ~1/N of the per-point-copies weight memory.  Feed the
+    result to ``AccelServer(point_executables=...)`` (or use
+    ``FlowResult.serve_adaptive``)."""
+    if not hasattr(writer, "packed"):
+        raise TypeError(
+            f"writer target {getattr(writer, 'target', '?')!r} does not hold "
+            "packed weights; shared point executables need the 'qjax' writer")
+    return {p.name: writer.build_batched(max_entries=max_entries,
+                                         on_compile=on_compile,
+                                         bits=p.weight_bits)
+            for p in points}
+
+
 @dataclass
 class RuntimePolicy:
     """CPS-style runtime manager: pick the working point from the budget.

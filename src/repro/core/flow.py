@@ -32,11 +32,18 @@ from repro.core.passes import (PassManager, default_pipeline,
 from repro.core.writers.jax_writer import BatchedExecutable, JaxWriter
 from repro.core.writers.stream_writer import StreamWriter
 from repro.core.writers.dist_writer import DistWriter
-from repro.core.adaptive import AdaptiveAccelerator, WorkingPoint
+from repro.core.writers.qjax_writer import QJaxWriter
+from repro.core.adaptive import (AdaptiveAccelerator, RuntimePolicy,
+                                 WorkingPoint, shared_point_executables)
 from repro.quant.qtypes import DatatypeConfig, PrecisionMap
 from repro.quant.ptq import graph_weight_stats
 
-WRITERS = {"jax": JaxWriter, "stream": StreamWriter, "dist": DistWriter}
+WRITERS = {"jax": JaxWriter, "stream": StreamWriter, "dist": DistWriter,
+           "qjax": QJaxWriter}
+
+# default adaptive ladder: the paper's W8/W4/W2 nested working points
+DEFAULT_POINTS = (WorkingPoint("w8", 8), WorkingPoint("w4", 4),
+                  WorkingPoint("w2", 2))
 
 Precision = Union[DatatypeConfig, PrecisionMap]
 
@@ -69,6 +76,27 @@ class FlowResult:
             (tuple(int(d) for d in t.shape[1:]), str(t.dtype))
             for t in self.graph.inputs))
         return AccelServer(self.batched[target], **kwargs)
+
+    def serve_adaptive(self, points: Sequence[WorkingPoint] = DEFAULT_POINTS,
+                       target: str = "qjax",
+                       policy: Optional[RuntimePolicy] = None,
+                       batch_cache: int = 8, **kwargs):
+        """An :class:`~repro.runtime.serve.AccelServer` whose per-batch
+        precision working points ALL read one shared
+        :class:`~repro.quant.pack.PackedWeights` buffer: the
+        :class:`~repro.core.adaptive.RuntimePolicy` picks a point from each
+        batch's energy budget, and switching is a static kernel-arg change —
+        no re-build, no weight copy (requires the packed-weight ``"qjax"``
+        target in this result)."""
+        writer = self.writers.get(target)
+        if writer is None or not hasattr(writer, "packed"):
+            raise KeyError(
+                f"serve_adaptive needs a packed-weight writer (target "
+                f"'qjax'); this result has {tuple(self.writers)}")
+        pts = shared_point_executables(writer, points,
+                                       max_entries=batch_cache)
+        return self.serve(target, policy=policy or RuntimePolicy(list(points)),
+                          point_executables=pts, **kwargs)
 
 
 def _split_precision(dtconfig: Optional[Precision]

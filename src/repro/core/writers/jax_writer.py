@@ -55,7 +55,8 @@ class BatchedExecutable:
 
     def __init__(self, fn: Callable, max_entries: int = 8,
                  compile_fn: Optional[Callable[[Signature], Callable]] = None,
-                 on_compile: Optional[Callable[[Signature], None]] = None):
+                 on_compile: Optional[Callable[[Signature], None]] = None,
+                 bits: Optional[int] = None):
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
         self._fn = fn
@@ -67,6 +68,9 @@ class BatchedExecutable:
         # serving telemetry hook: called with the signature on every trace
         # miss (a scheduler can count retraces per bucket / alert on churn)
         self.on_compile = on_compile
+        # weight working point this artifact executes at (packed-weight
+        # writers stamp it; AccelServer telemetry attributes batches to it)
+        self.bits = bits
 
     @staticmethod
     def signature(*inputs) -> Signature:
@@ -116,6 +120,7 @@ class BatchedExecutable:
             "hit_rate": self.hits / total if total else 0.0,
             "cached_batches": self.cached_batches,
             "capacity": self.max_entries,
+            "bits": self.bits,
         }
 
 
@@ -133,6 +138,9 @@ class JaxWriter:
         self.graph = graph
         self.dt = dtconfig or DatatypeConfig(32, 32)
         self.act_ranges = act_ranges or {}
+        # output names whose activation quant an op impl already applied in
+        # its (fused) epilogue — _act_q skips them instead of re-rounding
+        self._fused_act: set = set()
         self.weights = self._prepare_weights()
 
     # -- per-layer precision -------------------------------------------------
@@ -163,6 +171,8 @@ class JaxWriter:
         return registered_ops(self.target)
 
     def _act_q(self, name: str, x, node: Optional[Node] = None):
+        if name in self._fused_act:
+            return x   # an op epilogue already applied this tensor's quant
         bits = self.node_dt(node).act_bits
         if bits >= 32 or not jnp.issubdtype(x.dtype, jnp.floating):
             return x
@@ -170,13 +180,27 @@ class JaxWriter:
         return fake_quant(x, qt)
 
     # -- build --------------------------------------------------------------
-    def build(self, capture: bool = False) -> Callable:
+    def _env_seed(self, bits: Optional[int] = None) -> Dict[str, Any]:
+        """The environment a built executable starts from.  ``bits`` selects
+        the weight working point for writers whose weights are packed master
+        codes (target "qjax"); the reference writers bake precision into
+        ``self.weights`` at construction and reject it."""
+        if bits is not None:
+            raise ValueError(
+                f"writer target {self.target!r} bakes weight precision at "
+                "build; bits= is a parameter of packed-weight writers "
+                "(target 'qjax')")
+        return self.weights
+
+    def build(self, capture: bool = False,
+              bits: Optional[int] = None) -> Callable:
         order = self.graph.topo_order()
         in_names = [t.name for t in self.graph.inputs]
         impls = [(node, self.op_impl(node.op)) for node in order]
+        seed = self._env_seed(bits)
 
         def run(*inputs):
-            env: Dict[str, Any] = dict(self.weights)
+            env: Dict[str, Any] = dict(seed)
             for n, x in zip(in_names, inputs):
                 env[n] = self._act_q(n, x)
             for node, impl in impls:
@@ -195,10 +219,12 @@ class JaxWriter:
         return jax.jit(self.build())
 
     def build_batched(self, max_entries: int = 8,
-                      on_compile: Optional[Callable] = None
-                      ) -> BatchedExecutable:
+                      on_compile: Optional[Callable] = None,
+                      bits: Optional[int] = None) -> BatchedExecutable:
         """Batch-polymorphic executable: one artifact, any leading-dim size,
         LRU of per-signature traces (see :class:`BatchedExecutable`);
-        ``on_compile`` observes every trace miss (serving telemetry)."""
-        return BatchedExecutable(self.build(), max_entries=max_entries,
-                                 on_compile=on_compile)
+        ``on_compile`` observes every trace miss (serving telemetry).
+        ``bits`` selects the weight working point on packed-weight writers
+        and is stamped on the artifact for batch attribution."""
+        return BatchedExecutable(self.build(bits=bits), max_entries=max_entries,
+                                 on_compile=on_compile, bits=bits)

@@ -1,0 +1,272 @@
+"""Writer 4: IR -> packed-weight quantized executable (the "qjax" target).
+
+The execution engine the paper's one-copy-many-points architecture implies:
+every >=2-D initializer is quantized ONCE to int8 master codes +
+per-output-channel scales (:class:`~repro.quant.pack.PackedWeights`), and the
+hot-path ops run the dequant-fused :mod:`repro.kernels.qmatmul` kernels over
+those codes instead of an f32 ``@``/``conv`` over fake-quantized float copies:
+
+* ``Gemm`` / ``MatMul`` call ``qgemm`` on the packed codes — the ``bits``-bit
+  view is truncated in-VMEM, the per-channel rescale, bias and the
+  consumer-side fixed-point activation quant happen in the kernel epilogue
+  (no separate round/clip op per FIFO);
+* ``Conv`` / ``FusedConv`` lower to im2col + ``qgemm`` with the folded ReLU
+  fused into the same epilogue (kernel path), or to an XLA conv over the
+  dequantized view (ref path — XLA folds the dequant of constant codes into
+  a constant weight, so the CPU fallback costs exactly one conv);
+* the active working point ``bits`` is a parameter of ``build`` /
+  ``build_batched``, NOT baked into the weights: every point executable
+  reads the SAME :class:`PackedWeights` buffer, so ``AccelServer`` switching
+  W8 -> W4 -> W2 per batch moves no weights and holds ~N× less memory than
+  per-point copies.
+
+Backend selection: compiled Pallas on TPU; off-TPU the jnp reference path
+(``use_kernel``/``interpret`` writer kwargs override, e.g. forced
+interpret-mode kernels in tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ir import Graph, Node
+from repro.core.writers.jax_writer import BatchedExecutable, JaxWriter
+from repro.core.writers.registry import register_op, resolve
+from repro.kernels.qmatmul.ops import qgemm, resolve_interpret
+from repro.kernels.qmatmul.ref import epilogue_ref
+from repro.quant.pack import PackedTensor, PackedWeights
+from repro.quant.qtypes import DatatypeConfig, fixed_for_range
+
+# reserved env key carrying the writer context into the qjax op impls; graph
+# tensor names are ONNX-style identifiers and cannot collide with it
+QCTX = "__qctx__"
+
+
+@dataclass
+class QJaxContext:
+    """Per-build context the qjax op impls read from the env: the active
+    working point and the writer's precision/calibration state."""
+
+    writer: "QJaxWriter"
+    bits: int
+
+    def weight_bits(self, node: Optional[Node]) -> int:
+        """Effective view bits: the runtime working point, capped by the
+        node's per-layer weight precision when the precision pass assigned
+        one below it (a W4 layer stays W4 even at the W8 point)."""
+        dt = self.writer.node_dt(node)
+        if dt.weight_bits < 32:
+            return min(self.bits, dt.weight_bits)
+        return self.bits
+
+    def act_qt(self, name: str, node: Optional[Node]
+               ) -> Optional[Tuple[int, int, int]]:
+        """Static epilogue spec for the output's fixed-point activation
+        quant — same qtype ``_act_q`` would use, fused into the kernel."""
+        dt = self.writer.node_dt(node)
+        if dt.act_bits >= 32:
+            return None
+        qt = fixed_for_range(dt.act_bits,
+                             self.writer.act_ranges.get(name, 8.0))
+        return (qt.frac, qt.qmin, qt.qmax)
+
+    def mark_fused(self, name: str) -> None:
+        self.writer._fused_act.add(name)
+
+
+# ---------------------------------------------------------------------------
+# im2col (the streaming conv as a packed matmul)
+# ---------------------------------------------------------------------------
+
+def _pad_amounts(h: int, k: int, s: int, pads) -> Tuple[int, Tuple[int, int]]:
+    """(out_dim, (lo, hi)) for one spatial dim — matches XLA's SAME/VALID."""
+    if pads == "SAME":
+        oh = -(-h // s)
+        pad = max((oh - 1) * s + k - h, 0)
+        return oh, (pad // 2, pad - pad // 2)
+    if pads == "VALID":
+        return (h - k) // s + 1, (0, 0)
+    lo, hi = pads
+    return (h + lo + hi - k) // s + 1, (int(lo), int(hi))
+
+
+def im2col(x, kh: int, kw: int, strides, pads):
+    """x: (B, H, W, C) -> patches (B, OH, OW, kh*kw*C), dy-major then dx then
+    channel — the order HWIO weights flatten to for the (K, N) matmul."""
+    sh, sw = strides
+    B, H, W, C = x.shape
+    oh, (ph0, ph1) = _pad_amounts(H, kh, sh, pads if isinstance(pads, str)
+                                  else pads[0])
+    ow, (pw0, pw1) = _pad_amounts(W, kw, sw, pads if isinstance(pads, str)
+                                  else pads[1])
+    xp = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(xp[:, dy:dy + sh * (oh - 1) + 1:sh,
+                           dx:dx + sw * (ow - 1) + 1:sw, :])
+    return jnp.concatenate(cols, axis=-1), oh, ow
+
+
+# ---------------------------------------------------------------------------
+# qjax op implementations
+# ---------------------------------------------------------------------------
+
+def _qgemm_node(node: Node, env, relu: bool = False):
+    """Shared Gemm/MatMul lowering; None when the weight is not packed
+    (activation×activation matmul, no context) so the caller falls back."""
+    ctx = env.get(QCTX)
+    w = env.get(node.inputs[1])
+    if ctx is None or not isinstance(w, PackedTensor):
+        return None
+    x = env[node.inputs[0]]
+    bias = env[node.inputs[2]] if len(node.inputs) > 2 else None
+    out = node.outputs[0]
+    aqt = ctx.act_qt(out, node)
+    y = qgemm(x, w.codes_2d(), w.scale_1d(), bias,
+              bits=ctx.weight_bits(node), relu=relu, act_qt=aqt,
+              interpret=ctx.writer.interpret,
+              use_kernel=ctx.writer.kernel_enabled())
+    ctx.mark_fused(out)
+    return y
+
+
+@register_op("Gemm", target="qjax")
+def _op_gemm_qjax(node: Node, env):
+    y = _qgemm_node(node, env)
+    return y if y is not None else resolve("Gemm", "jax")(node, env)
+
+
+@register_op("MatMul", target="qjax")
+def _op_matmul_qjax(node: Node, env):
+    y = _qgemm_node(node, env)
+    return y if y is not None else resolve("MatMul", "jax")(node, env)
+
+
+def _qconv_node(node: Node, env, relu: bool):
+    ctx = env.get(QCTX)
+    w = env.get(node.inputs[1])
+    if ctx is None or not isinstance(w, PackedTensor):
+        return None
+    x = env[node.inputs[0]]
+    bias = env[node.inputs[2]] if len(node.inputs) > 2 else None
+    kh, kw, _, cout = w.codes.shape
+    strides = tuple(node.attrs.get("strides", (1, 1)))
+    pads = node.attrs.get("pads", "SAME")
+    out = node.outputs[0]
+    bits = ctx.weight_bits(node)
+    aqt = ctx.act_qt(out, node)
+    if ctx.writer.kernel_enabled():
+        # im2col + dequant-fused matmul; ReLU and the consumer-side
+        # activation quant ride in the kernel epilogue
+        patches, oh, ow = im2col(x, kh, kw, strides, pads)
+        y = qgemm(patches.reshape(-1, patches.shape[-1]),
+                  w.codes_2d(), w.scale_1d(), bias,
+                  bits=bits, relu=relu, act_qt=aqt,
+                  interpret=ctx.writer.interpret, use_kernel=True)
+        y = y.reshape(x.shape[0], oh, ow, cout)
+    else:
+        # ref path: XLA conv over the dequantized view — codes are trace
+        # constants, so the dequant folds into a constant f32 weight
+        wf = w.dequant(bits, jnp.float32)
+        y = jax.lax.conv_general_dilated(
+            x, wf, window_strides=strides, padding=pads,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if bias is not None:
+            y = y + bias
+        y = epilogue_ref(y, relu, aqt)
+    ctx.mark_fused(out)
+    return y
+
+
+@register_op("Conv", target="qjax")
+def _op_conv_qjax(node: Node, env):
+    y = _qconv_node(node, env, relu=False)
+    return y if y is not None else resolve("Conv", "jax")(node, env)
+
+
+@register_op("FusedConv", target="qjax")
+def _op_fused_conv_qjax(node: Node, env):
+    y = _qconv_node(node, env, relu=bool(node.attrs.get("relu")))
+    return y if y is not None else resolve("FusedConv", "jax")(node, env)
+
+
+# ---------------------------------------------------------------------------
+# the writer
+# ---------------------------------------------------------------------------
+
+class QJaxWriter(JaxWriter):
+    """Packed-weight quantized execution engine (see module docstring).
+
+    Writer kwargs (``DesignFlow.run(writer_kwargs={"qjax": {...}})``):
+
+    * ``use_kernel`` — None (auto: Pallas on TPU, jnp ref elsewhere), True
+      (force the kernel, interpret-mode off-TPU), False (force the ref path);
+    * ``interpret``  — override for the Pallas interpret flag (None = auto);
+    * ``default_bits`` — working point used when ``build(bits=None)``.
+    """
+
+    target = "qjax"
+
+    def __init__(self, graph: Graph,
+                 dtconfig: Optional[DatatypeConfig] = None,
+                 act_ranges: Optional[Dict[str, float]] = None, *,
+                 use_kernel: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
+                 default_bits: Optional[int] = None):
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self._default_bits = default_bits
+        super().__init__(graph, dtconfig, act_ranges)
+
+    # -- packed weights ------------------------------------------------------
+    def _prepare_weights(self) -> Dict[str, Any]:
+        """Quantize once to shared int8 master codes; the active ``bits``
+        view is selected per build, not here."""
+        self.packed = PackedWeights.from_initializers(self.graph.initializers)
+        out: Dict[str, Any] = dict(self.packed.passthrough)
+        out.update(self.packed.tensors)
+        return out
+
+    @property
+    def default_bits(self) -> int:
+        if self._default_bits is not None:
+            return int(self._default_bits)
+        if self.dt.weight_bits < 32:
+            return min(8, self.dt.weight_bits)
+        return 8
+
+    def weight_bytes(self) -> int:
+        """Bytes of the shared master buffer (all working points included)."""
+        return self.packed.code_bytes()
+
+    # -- backend routing -----------------------------------------------------
+    def kernel_enabled(self) -> bool:
+        if self.use_kernel is not None:
+            return bool(self.use_kernel)
+        return not resolve_interpret(self.interpret)
+
+    @property
+    def qpath(self) -> str:
+        """Which execution path this writer resolves to on this backend."""
+        return "pallas" if self.kernel_enabled() else "ref"
+
+    # -- build ---------------------------------------------------------------
+    def _env_seed(self, bits: Optional[int] = None) -> Dict[str, Any]:
+        env: Dict[str, Any] = dict(self.weights)
+        env[QCTX] = QJaxContext(self, self.default_bits if bits is None
+                                else int(bits))
+        return env
+
+    def build_batched(self, max_entries: int = 8,
+                      on_compile: Optional[Callable] = None,
+                      bits: Optional[int] = None) -> BatchedExecutable:
+        exe = super().build_batched(max_entries=max_entries,
+                                    on_compile=on_compile,
+                                    bits=self.default_bits if bits is None
+                                    else int(bits))
+        exe.packed = self.packed   # buffer-identity accounting in tests/serve
+        return exe

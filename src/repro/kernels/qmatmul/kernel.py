@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: dequant-fused quantized matmul.
+"""Pallas TPU kernel: dequant-fused quantized matmul with a fused epilogue.
 
 Weights live in HBM as int8 master codes (one copy serves every working point,
 DESIGN.md §2 MDC row); each (bk, bn) tile is streamed into VMEM, truncated to
@@ -6,16 +6,27 @@ the active ``bits`` view, dequantized with the per-channel scale and fed to the
 MXU against a (bm, bk) activation tile.  f32 accumulation in a VMEM scratch
 tile across the k grid dim (TPU grid is sequential => scratch carries).
 
+The epilogue runs in-VMEM on the final k step: per-channel rescale, optional
+bias add, optional ReLU and optional fixed-point activation quantization
+(``act_qt = (frac, qmin, qmax)``, bit-identical to
+``quant.fixedpoint.fake_quant``) — so the consumer-side round/clip the writers
+used to emit as a separate op per FIFO happens inside the matmul kernel.
+
 Block shapes are MXU-aligned (multiples of 128 on M/N; 128 lanes on K).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# the epilogue body is shared with the jnp oracle (pure jnp, traces fine
+# inside a Pallas kernel) so the bit-exactness contract has ONE home
+from repro.kernels.qmatmul.ref import ActQt, epilogue_ref
 
 DEFAULT_BM = 128
 DEFAULT_BN = 128
@@ -32,8 +43,15 @@ def _truncate(codes_f32, bits: int):
     return q * step
 
 
-def qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int, nk: int):
-    """Grid (m, n, k). x: (bm, bk) bf16; w: (bk, bn) int8; s: (1, bn) f32."""
+def qgemm_kernel(*refs, bits: int, nk: int, has_bias: bool, relu: bool,
+                 act_qt: Optional[ActQt]):
+    """Grid (m, n, k). x: (bm, bk) bf16; w: (bk, bn) int8; s: (1, bn) f32;
+    optional b: (1, bn) f32."""
+    if has_bias:
+        x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, w_ref, s_ref, o_ref, acc_ref = refs
+        b_ref = None
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -47,12 +65,20 @@ def qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits: int, nk: int):
 
     @pl.when(k == nk - 1)
     def _done():
-        o_ref[...] = (acc_ref[...] * s_ref[...].astype(jnp.float32)
-                      ).astype(o_ref.dtype)
+        y = acc_ref[...] * s_ref[...].astype(jnp.float32)
+        if b_ref is not None:
+            y = y + b_ref[...].astype(jnp.float32)
+        o_ref[...] = epilogue_ref(y, relu, act_qt).astype(o_ref.dtype)
+
+
+# backward-compatible alias: the original no-epilogue float-activation kernel
+qmatmul_kernel = functools.partial(qgemm_kernel, has_bias=False, relu=False,
+                                   act_qt=None)
 
 
 def qmatmul_int8_kernel(x_ref, xs_ref, w_ref, s_ref, o_ref, acc_ref, *,
-                        bits: int, nk: int):
+                        bits: int, nk: int, relu: bool = False,
+                        act_qt: Optional[ActQt] = None):
     """Integer-domain path: x int8 codes (bm, bk) + per-row scale (bm, 1);
     int32 accumulation (MXU int8 rate)."""
     k = pl.program_id(2)
@@ -70,21 +96,26 @@ def qmatmul_int8_kernel(x_ref, xs_ref, w_ref, s_ref, o_ref, acc_ref, *,
 
     @pl.when(k == nk - 1)
     def _done():
-        o_ref[...] = (acc_ref[...].astype(jnp.float32)
-                      * xs_ref[...].astype(jnp.float32)
-                      * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+        y = (acc_ref[...].astype(jnp.float32)
+             * xs_ref[...].astype(jnp.float32)
+             * s_ref[...].astype(jnp.float32))
+        o_ref[...] = epilogue_ref(y, relu, act_qt).astype(o_ref.dtype)
 
 
 def build_call(M: int, K: int, N: int, *, bits: int, int8_act: bool,
                bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
-               out_dtype=jnp.bfloat16, interpret: bool = False):
+               out_dtype=jnp.bfloat16, interpret: bool = False,
+               has_bias: bool = False, relu: bool = False,
+               act_qt: Optional[ActQt] = None):
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, K, N, bm, bn, bk)
     nk = K // bk
     grid = (M // bm, N // bn, nk)
 
     if int8_act:
-        kern = functools.partial(qmatmul_int8_kernel, bits=bits, nk=nk)
+        assert not has_bias, "bias epilogue is float-activation only"
+        kern = functools.partial(qmatmul_int8_kernel, bits=bits, nk=nk,
+                                 relu=relu, act_qt=act_qt)
         in_specs = [
             pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
             pl.BlockSpec((bm, 1), lambda m, n, k: (m, 0)),
@@ -93,12 +124,15 @@ def build_call(M: int, K: int, N: int, *, bits: int, int8_act: bool,
         ]
         acc_dtype = jnp.int32
     else:
-        kern = functools.partial(qmatmul_kernel, bits=bits, nk=nk)
+        kern = functools.partial(qgemm_kernel, bits=bits, nk=nk,
+                                 has_bias=has_bias, relu=relu, act_qt=act_qt)
         in_specs = [
             pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
             pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
             pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
         ]
+        if has_bias:
+            in_specs.append(pl.BlockSpec((1, bn), lambda m, n, k: (0, n)))
         acc_dtype = jnp.float32
 
     return pl.pallas_call(

@@ -1,20 +1,103 @@
-"""jit'd public wrapper for the quantized matmul kernel.
+"""jit'd public wrappers for the quantized matmul kernel.
 
 ``qmatmul(x, codes, scale, bits=…)`` handles arbitrary leading batch dims,
 pads M/K/N up to MXU-aligned tiles, and falls back to the jnp oracle for
-shapes too small to tile (CPU smoke paths).
+shapes too small to tile (CPU smoke paths).  ``qgemm`` is the writer-facing
+entry point: bias + ReLU + activation fake-quant fused into the kernel
+epilogue, backend-aware ``interpret`` selection (compiled on TPU, jnp-ref
+fallback off-TPU) and a small block-size autotune cache keyed on
+``(M, K, N, bits)``.
 """
 from __future__ import annotations
 
 import functools
+import time
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.qmatmul.kernel import build_call, DEFAULT_BM, DEFAULT_BN, DEFAULT_BK
-from repro.kernels.qmatmul.ref import qmatmul_ref
+from repro.kernels.qmatmul.kernel import (ActQt, build_call, DEFAULT_BM,
+                                          DEFAULT_BN, DEFAULT_BK)
+from repro.kernels.qmatmul.ref import qgemm_ref, qmatmul_ref
 
 _MIN_TILE = 128
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Backend-aware ``interpret`` default: compiled Pallas on TPU, interpret
+    mode everywhere else.  An explicit True/False always wins (writer kwargs
+    pass it through for tests and forced modes)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+# -- block-size autotune ----------------------------------------------------
+# keyed on the padded problem (M, K, N, bits) plus the interpret flag (an
+# interpret-mode entry must not pin the untuned default for later compiled
+# calls of the same shape); populated by timing candidate tilings on
+# synthetic data the first time a shape is seen on a compiled backend, by
+# the static default in interpret mode (timing interpret-mode Pallas would
+# measure the emulator, not the hardware)
+_BLOCK_CACHE: Dict[Tuple[int, int, int, int, bool],
+                   Tuple[int, int, int]] = {}
+
+_CANDIDATE_BLOCKS = ((128, 128, 512), (128, 256, 512), (256, 128, 512),
+                     (128, 128, 256), (256, 256, 512))
+
+
+def _default_blocks(M: int, K: int, N: int) -> Tuple[int, int, int]:
+    return min(DEFAULT_BM, M), min(DEFAULT_BN, N), min(DEFAULT_BK, K)
+
+
+def _time_call(call, args, iters: int = 3) -> float:
+    jax.block_until_ready(call(*args))          # compile + warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def pick_blocks(M: int, K: int, N: int, bits: int,
+                interpret: bool) -> Tuple[int, int, int]:
+    """(bm, bn, bk) for an M×K×N problem at a working point.
+
+    All dims are already padded to multiples of ``_MIN_TILE``.  Results are
+    cached per (M, K, N, bits, interpret); the timing pass runs on synthetic
+    concrete data, so it is safe to call at trace time inside an outer jit."""
+    key = (M, K, N, bits, interpret)
+    hit = _BLOCK_CACHE.get(key)
+    if hit is not None:
+        return hit
+    default = _default_blocks(M, K, N)
+    if interpret:
+        _BLOCK_CACHE[key] = default
+        return default
+    cands = {default}
+    for bm, bn, bk in _CANDIDATE_BLOCKS:
+        bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+        if M % bm == 0 and N % bn == 0 and K % bk == 0:
+            cands.add((bm, bn, bk))
+    if len(cands) == 1:
+        _BLOCK_CACHE[key] = default
+        return default
+    kx = jax.random.PRNGKey(0)
+    x = jax.random.normal(kx, (M, K), jnp.bfloat16)
+    w = jax.random.randint(jax.random.PRNGKey(1), (K, N), -127, 128,
+                           jnp.int8)
+    s = jnp.ones((1, N), jnp.float32)
+    best, best_t = default, float("inf")
+    for bm, bn, bk in sorted(cands):
+        call = build_call(M, K, N, bits=bits, int8_act=False,
+                          bm=bm, bn=bn, bk=bk, interpret=False)
+        t = _time_call(call, (x, w, s))
+        if t < best_t:
+            best, best_t = (bm, bn, bk), t
+    _BLOCK_CACHE[key] = best
+    return best
 
 
 def _pad_to(x, m, axis):
@@ -28,7 +111,8 @@ def _pad_to(x, m, axis):
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret", "use_kernel",
                                              "bm", "bn", "bk"))
-def qmatmul(x, codes, scale, *, bits: int = 8, interpret: bool = True,
+def qmatmul(x, codes, scale, *, bits: int = 8,
+            interpret: Optional[bool] = None,
             use_kernel: bool = True, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
             bk: int = DEFAULT_BK):
     """x: (..., K) float; codes: (K, N) int8; scale: (N,) f32 -> (..., N)."""
@@ -39,20 +123,69 @@ def qmatmul(x, codes, scale, *, bits: int = 8, interpret: bool = True,
     if not use_kernel or min(M, K, N) < 8:
         y = qmatmul_ref(x2, codes, scale, bits, out_dtype=x.dtype)
         return y.reshape(*lead, N)
+    interp = resolve_interpret(interpret)
     xp = _pad_to(_pad_to(x2, _MIN_TILE, 0), _MIN_TILE, 1)
     cp = _pad_to(_pad_to(codes, _MIN_TILE, 0), _MIN_TILE, 1)
     sp = _pad_to(scale.reshape(1, -1).astype(jnp.float32), _MIN_TILE, 1)
     call = build_call(xp.shape[0], xp.shape[1], cp.shape[1], bits=bits,
                       int8_act=False, bm=min(bm, xp.shape[0]),
                       bn=min(bn, cp.shape[1]), bk=min(bk, xp.shape[1]),
-                      out_dtype=x.dtype, interpret=interpret)
+                      out_dtype=x.dtype, interpret=interp)
     y = call(xp.astype(jnp.bfloat16), cp, sp)[:M, :N]
+    return y.reshape(*lead, N)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "relu", "act_qt",
+                                             "interpret", "use_kernel",
+                                             "bm", "bn", "bk"))
+def qgemm(x, codes, scale, bias=None, *, bits: int = 8, relu: bool = False,
+          act_qt: Optional[ActQt] = None, interpret: Optional[bool] = None,
+          use_kernel: Optional[bool] = None,
+          bm: Optional[int] = None, bn: Optional[int] = None,
+          bk: Optional[int] = None):
+    """Packed-weight Gemm with the fused epilogue — the execution engine's
+    hot-path op.
+
+    x: (..., K) float; codes: (K, N) int8 master; scale: (N,) f32; bias:
+    (N,) or None.  ``use_kernel=None`` auto-selects: the compiled Pallas
+    kernel on TPU, the jnp reference (which XLA constant-folds into a plain
+    matmul when codes are trace constants) elsewhere.  ``act_qt`` is the
+    consumer-side fixed-point activation quant ``(frac, qmin, qmax)``,
+    applied inside the kernel epilogue instead of as a separate round/clip
+    op per FIFO."""
+    lead = x.shape[:-1]
+    K, N = codes.shape
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    interp = resolve_interpret(interpret)
+    if use_kernel is None:
+        use_kernel = not interp
+    if not use_kernel or min(M, K, N) < 8:
+        y = qgemm_ref(x2, codes, scale, bias, bits=bits, relu=relu,
+                      act_qt=act_qt, out_dtype=x.dtype)
+        return y.reshape(*lead, N)
+    xp = _pad_to(_pad_to(x2, _MIN_TILE, 0), _MIN_TILE, 1)
+    cp = _pad_to(_pad_to(codes, _MIN_TILE, 0), _MIN_TILE, 1)
+    sp = _pad_to(scale.reshape(1, -1).astype(jnp.float32), _MIN_TILE, 1)
+    Mp, Kp, Np = xp.shape[0], xp.shape[1], cp.shape[1]
+    if bm is None or bn is None or bk is None:
+        abm, abn, abk = pick_blocks(Mp, Kp, Np, bits, interp)
+        bm, bn, bk = bm or abm, bn or abn, bk or abk
+    args = [xp.astype(jnp.bfloat16), cp, sp]
+    if bias is not None:
+        args.append(_pad_to(bias.reshape(1, -1).astype(jnp.float32),
+                            _MIN_TILE, 1))
+    call = build_call(Mp, Kp, Np, bits=bits, int8_act=False,
+                      bm=min(bm, Mp), bn=min(bn, Np), bk=min(bk, Kp),
+                      out_dtype=x.dtype, interpret=interp,
+                      has_bias=bias is not None, relu=relu, act_qt=act_qt)
+    y = call(*args)[:M, :N]
     return y.reshape(*lead, N)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
 def qmatmul_int8_act(x_codes, x_scale, codes, scale, *, bits: int = 8,
-                     interpret: bool = True, out_dtype=jnp.bfloat16):
+                     interpret: Optional[bool] = None, out_dtype=jnp.bfloat16):
     """Full-integer path: x_codes (M, K) int8 + per-row scale (M,)."""
     M, K = x_codes.shape
     N = codes.shape[1]
@@ -61,5 +194,6 @@ def qmatmul_int8_act(x_codes, x_scale, codes, scale, *, bits: int = 8,
     cp = _pad_to(_pad_to(codes, _MIN_TILE, 0), _MIN_TILE, 1)
     sp = _pad_to(scale.reshape(1, -1).astype(jnp.float32), _MIN_TILE, 1)
     call = build_call(xp.shape[0], xp.shape[1], cp.shape[1], bits=bits,
-                      int8_act=True, out_dtype=out_dtype, interpret=interpret)
+                      int8_act=True, out_dtype=out_dtype,
+                      interpret=resolve_interpret(interpret))
     return call(xp, xsp, cp, sp)[:M, :N]

@@ -1,9 +1,28 @@
 """Pure-jnp oracle for the dequant-fused quantized matmul."""
 from __future__ import annotations
 
+from typing import Optional, Tuple
+
 import jax.numpy as jnp
 
 from repro.quant.ptq import derive_view
+
+# static spec of the fused activation quant: (frac, qmin, qmax)
+ActQt = Tuple[int, int, int]
+
+
+def epilogue_ref(y, relu: bool = False, act_qt: Optional[ActQt] = None):
+    """ReLU + fixed-point activation fake-quant, bit-identical to
+    ``fixedpoint.fake_quant`` (round-half-even, saturate; powers of two are
+    exact in f32).  The Pallas kernels trace this same function in-VMEM, so
+    the kernel/oracle bit-exactness contract has one home."""
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if act_qt is not None:
+        frac, qmin, qmax = act_qt
+        code = jnp.clip(jnp.round(y * (2.0 ** frac)), qmin, qmax)
+        y = code * (2.0 ** -frac)
+    return y
 
 
 def qmatmul_ref(x, codes, scale, bits: int = 8, out_dtype=jnp.bfloat16):
@@ -14,6 +33,21 @@ def qmatmul_ref(x, codes, scale, bits: int = 8, out_dtype=jnp.bfloat16):
     w = derive_view(codes, bits).astype(jnp.float32) * scale.reshape(1, -1)
     y = jnp.dot(x.astype(jnp.float32), w)
     return y.astype(out_dtype)
+
+
+def qgemm_ref(x, codes, scale, bias=None, *, bits: int = 8,
+              relu: bool = False, act_qt: Optional[ActQt] = None,
+              out_dtype=jnp.float32):
+    """Gemm over the ``bits``-bit view with the fused epilogue applied.
+
+    Under jit with constant ``codes``/``scale`` XLA folds the dequant into a
+    constant f32 weight, so this path costs exactly one matmul at runtime —
+    the honest CPU fallback for the packed execution engine."""
+    w = derive_view(codes, bits).astype(jnp.float32) * scale.reshape(1, -1)
+    y = jnp.dot(x.astype(jnp.float32), w)
+    if bias is not None:
+        y = y + bias.reshape(1, -1).astype(jnp.float32)
+    return epilogue_ref(y, relu, act_qt).astype(out_dtype)
 
 
 def qmatmul_int8_act_ref(x_codes, x_scale, codes, scale, bits: int = 8,

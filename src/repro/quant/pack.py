@@ -1,11 +1,119 @@
-"""Bit-packing for sub-byte weight storage (int4: 2/byte, int2: 4/byte).
+"""Packed weight storage: the one-copy-many-points artifact.
 
-Packing is what turns low weight precision into a real HBM-bandwidth win on
-TPU (the paper's BRAM-column effect); ``repro.kernels.qmatmul`` unpacks in-VMEM.
+Two layers live here:
+
+* :class:`PackedWeights` / :class:`PackedTensor` — every >=2-D initializer of
+  a graph quantized ONCE to int8 master codes + per-output-channel f32 scales.
+  W4/W2 working points are *nested truncations* of the same codes
+  (``quant.ptq.derive_view``), so N working points share ONE buffer — the
+  paper's MDC weight sharing, and what lets ``AccelServer`` switch precision
+  per batch with zero weight movement.  The dequant-fused
+  ``repro.kernels.qmatmul`` kernels stream these codes directly.
+* bit-packing helpers for sub-byte storage (int4: 2/byte, int2: 4/byte) —
+  what turns low weight precision into a real HBM-bandwidth win on TPU (the
+  paper's BRAM-column effect); the kernels unpack in-VMEM.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
 import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Packed master-code artifact (graph-level analogue of ptq.QuantizedParams)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PackedTensor:
+    """One weight, quantized once: int8 master codes + per-out-channel scale.
+
+    ``codes`` keeps the original weight shape (HWIO for conv, (K, N) for
+    Gemm); ``scale`` is f32 and broadcastable against it (keepdims over the
+    last axis).  Low-bit working points are derived views of the same codes —
+    no storage per point."""
+
+    codes: jax.Array     # int8, original weight shape
+    scale: jax.Array     # f32, per-output-channel (last dim), keepdims
+
+    def view(self, bits: int) -> jax.Array:
+        """The ``bits``-bit nested-truncation view of the master codes."""
+        from repro.quant.ptq import derive_view
+        return derive_view(self.codes, bits)
+
+    def dequant(self, bits: int = 8, dtype=jnp.float32) -> jax.Array:
+        """Fake-quant float copy at a working point (the legacy writer path —
+        under jit over constant codes XLA folds this away)."""
+        from repro.quant.ptq import dequant
+        return dequant(self.codes, self.scale, bits, dtype)
+
+    def codes_2d(self) -> jax.Array:
+        """Codes flattened to (K, N) for the qmatmul kernels (N = out chans)."""
+        return self.codes.reshape(-1, self.codes.shape[-1])
+
+    def scale_1d(self) -> jax.Array:
+        return self.scale.reshape(-1)
+
+    @property
+    def nbytes(self) -> int:
+        """Master storage: 1 byte/code + 4 bytes/scale (shared by all points)."""
+        return int(self.codes.size) + 4 * int(self.scale.size)
+
+
+@dataclass
+class PackedWeights:
+    """All of a graph's quantizable initializers packed to shared master codes.
+
+    ``tensors`` holds the packed >=2-D weights; ``passthrough`` everything that
+    stays float (biases, norm stats, 1-D tensors).  One instance backs every
+    working-point executable of a :class:`~repro.core.writers.qjax_writer.
+    QJaxWriter` — switching W8 -> W4 -> W2 re-reads the same buffers."""
+
+    tensors: Dict[str, PackedTensor]
+    passthrough: Dict[str, jax.Array]
+
+    @classmethod
+    def from_initializers(cls, initializers: Dict) -> "PackedWeights":
+        from repro.quant.ptq import is_quantizable, quantize_channelwise
+        tensors, passthrough = {}, {}
+        for name, arr in initializers.items():
+            w = jnp.asarray(arr)
+            if is_quantizable(name, w):
+                tensors[name] = PackedTensor(*quantize_channelwise(w))
+            else:
+                passthrough[name] = w
+        return cls(tensors, passthrough)
+
+    def dequantized(self, bits: int = 8, dtype=jnp.float32) -> Dict[str, jax.Array]:
+        """Fake-quant float copies at a working point (the pre-packed-engine
+        baseline: what each per-point executable used to hold)."""
+        out = dict(self.passthrough)
+        for name, t in self.tensors.items():
+            out[name] = t.dequant(bits, dtype)
+        return out
+
+    def code_bytes(self) -> int:
+        """Bytes of the shared master buffer (codes + scales)."""
+        return sum(t.nbytes for t in self.tensors.values())
+
+    def sharing_report(self, n_points: int) -> Dict[str, float]:
+        """Merged-vs-separate weight storage for ``n_points`` working points
+        (the MDC LUT-sharing story, in bytes): the shared master vs each point
+        holding its own int8 copy (a 1/n_points drop by construction), and —
+        the empirical ``sharing_ratio`` — vs the legacy per-point fake-quant
+        f32 copies the writers used to bake into each executable."""
+        shared = self.code_bytes()
+        n_elems = sum(int(t.codes.size) for t in self.tensors.values())
+        f32_copies = n_points * 4 * n_elems
+        return {
+            "n_points": n_points,
+            "shared_bytes": shared,
+            "per_point_copy_bytes": n_points * shared,
+            "per_point_f32_bytes": f32_copies,
+            "sharing_ratio": f32_copies / max(shared, 1),
+        }
 
 
 def pack_int4(codes):

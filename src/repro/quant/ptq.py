@@ -134,6 +134,16 @@ def _channel_scale(w):
     return jnp.maximum(m, 1e-8) / 127.0
 
 
+def quantize_channelwise(w) -> Tuple[jax.Array, jax.Array]:
+    """(int8 master codes, per-out-channel f32 scale) — THE master-code rule.
+    Single source of truth shared by the LM-serving tree path below and the
+    graph-level :class:`repro.quant.pack.PackedWeights`."""
+    s = _channel_scale(w)
+    codes = jnp.clip(jnp.round(w.astype(jnp.float32) / s),
+                     -127, 127).astype(jnp.int8)
+    return codes, s.astype(jnp.float32)
+
+
 def quantize_tree_native(params: Dict[str, jax.Array],
                          quant_embeddings: bool = False) -> QuantizedParams:
     codes, scales, passthrough = {}, {}, {}
@@ -142,10 +152,7 @@ def quantize_tree_native(params: Dict[str, jax.Array],
         if not quant_embeddings and path.startswith(("embed/", "lm_head/")):
             quantize = False
         if quantize:
-            s = _channel_scale(w)
-            codes[path] = jnp.clip(jnp.round(w.astype(jnp.float32) / s),
-                                   -127, 127).astype(jnp.int8)
-            scales[path] = s
+            codes[path], scales[path] = quantize_channelwise(w)
         else:
             passthrough[path] = w
     return QuantizedParams(codes, scales, passthrough)

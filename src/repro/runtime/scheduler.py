@@ -119,12 +119,29 @@ class BucketPolicy:
     holds a traced size that fits with no more padding than that ladder
     bucket, in which case the cached size wins (a cache hit costs a few
     padded rows; a miss costs a fresh trace and may evict a hot one).
+
+    ``packing`` selects how many queued requests a batch takes: ``"fifo"``
+    (default) packs the maximal arrival-order prefix fitting ``max_batch``;
+    ``"best_fit"`` picks the arrival-order *prefix* whose padded waste is
+    minimal (ties favor the longer prefix).  Both are prefixes of the queue,
+    so neither reorders requests or starves the head — best-fit only trades
+    batch fullness for padding efficiency.
     """
 
-    def __init__(self, buckets: Optional[Sequence[int]] = None, max_batch: int = 8):
+    PACKINGS = ("fifo", "best_fit")
+
+    def __init__(
+        self,
+        buckets: Optional[Sequence[int]] = None,
+        max_batch: int = 8,
+        packing: str = "fifo",
+    ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if packing not in self.PACKINGS:
+            raise ValueError(f"packing must be one of {self.PACKINGS}, got {packing!r}")
         self.max_batch = max_batch
+        self.packing = packing
         ladder = tuple(sorted(set(buckets))) if buckets else _pow2_ladder(max_batch)
         if any(b < 1 for b in ladder):
             raise ValueError(f"buckets must be positive, got {ladder}")
@@ -151,6 +168,23 @@ class BucketPolicy:
         fits = [c for c in cached if size <= c <= ladder]
         return min(fits) if fits else ladder
 
+    def best_fit_take(
+        self, sizes: Sequence[int], cached: Collection[int] = ()
+    ) -> Tuple[int, int]:
+        """(#requests, total rows) of the arrival-order prefix with minimal
+        padded waste under the bucket rule; ties prefer the longer prefix
+        (more requests served per dispatch at equal waste)."""
+        best_take, best_total, best_waste = 0, 0, None
+        total = 0
+        for take, size in enumerate(sizes, start=1):
+            if total + size > self.max_batch:
+                break
+            total += size
+            waste = self.bucket_for(total, cached) - total
+            if best_waste is None or waste <= best_waste:
+                best_take, best_total, best_waste = take, total, waste
+        return best_take, best_total
+
 
 class CoalescingScheduler:
     """Bounded FIFO queue + continuous-batching packing rule.
@@ -171,10 +205,11 @@ class CoalescingScheduler:
         buckets: Optional[Sequence[int]] = None,
         clock: Callable[[], float] = time.monotonic,
         signature: Optional[RequestSignature] = None,
+        packing: str = "fifo",
     ):
         if queue_depth < 1:
             raise ValueError("queue_depth must be >= 1")
-        self.policy = BucketPolicy(buckets, max_batch)
+        self.policy = BucketPolicy(buckets, max_batch, packing=packing)
         self.max_batch = max_batch
         self.max_wait = max_wait
         self.queue_depth = queue_depth
@@ -264,6 +299,12 @@ class CoalescingScheduler:
         waited = self.clock() - self._queue[0].arrival
         if not (full or flush or waited >= self.max_wait):
             return None
+        if self.policy.packing == "best_fit" and take > 1:
+            # a batch is due (by the maximal prefix); best-fit may dispatch a
+            # shorter prefix whose bucket pads less — the rest stays queued
+            take, total = self.policy.best_fit_take(
+                [r.size for r in self._queue], cached
+            )
         reqs = [self._queue.popleft() for _ in range(take)]
         batch = ScheduledBatch(reqs, self.policy.bucket_for(total, cached))
         self.scheduled += 1

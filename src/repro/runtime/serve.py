@@ -189,6 +189,7 @@ class BatchReport:
     padding: int         # zero rows appended to reach the bucket
     requests: int        # member request count
     point: Optional[str]  # precision working point, if a policy is attached
+    bits: Optional[int] = None   # weight-bits view the executed artifact used
 
 
 class AccelServer:
@@ -218,11 +219,13 @@ class AccelServer:
                  point_executables: Optional[Dict[str, Callable]] = None,
                  clock: Callable[[], float] = time.monotonic,
                  history: int = 4096,
-                 signature: Optional[RequestSignature] = None):
+                 signature: Optional[RequestSignature] = None,
+                 packing: str = "fifo"):
         self.executable = executable
         self.scheduler = CoalescingScheduler(
             max_batch=max_batch, max_wait=max_wait, queue_depth=queue_depth,
-            buckets=buckets, clock=clock, signature=signature)
+            buckets=buckets, clock=clock, signature=signature,
+            packing=packing)
         self.policy = policy
         self.point_executables = dict(point_executables or {})
         self.clock = clock
@@ -257,11 +260,16 @@ class AccelServer:
         return tuple(sorted(sizes))
 
     def _execute(self, batch: ScheduledBatch) -> None:
-        exe, point = self.executable, None
+        exe, point, pt = self.executable, None, None
         if self.policy is not None:
             pt = self.policy.select(batch.budget)
             point = pt.name
             exe = self.point_executables.get(pt.name, exe)
+        # which weight-bits view served this batch: the artifact's own stamp
+        # (packed-weight executables carry it), else the selected point's
+        bits = getattr(exe, "bits", None)
+        if bits is None and pt is not None:
+            bits = pt.weight_bits
         # batch assembly and demux stay on the host: jnp.concatenate /
         # per-slice demux would XLA-compile a fresh kernel per distinct
         # request-shape combination, which dwarfs the accelerator call on a
@@ -303,7 +311,7 @@ class AccelServer:
         self.executed_batches += 1
         self.reports.append(BatchReport(batch.bucket, batch.size,
                                         batch.padding, len(batch.requests),
-                                        point))
+                                        point, bits))
 
     def pump(self, flush: bool = False) -> int:
         """Execute every batch the scheduler deems ready; ``flush=True``
@@ -369,4 +377,8 @@ class AccelServer:
         s["executed_batches"] = self.executed_batches
         s["points"] = dict(Counter(r.point for r in self.reports
                                    if r.point is not None))
+        # per-bits batch counts: lets the adaptive-switch benchmark attribute
+        # latency to weight working points (W8/W4/W2) over the same window
+        s["bits_views"] = dict(Counter(r.bits for r in self.reports
+                                       if r.bits is not None))
         return s

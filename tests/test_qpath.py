@@ -1,0 +1,300 @@
+"""Packed-weight execution engine: bit-exactness of the packed-kernel path
+against the fake-quant reference, nested-view truncation, fused epilogue
+semantics, backend-aware interpret selection, shared weight buffers across
+working points, and the AccelServer bits telemetry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.mnist_cnn import CONFIG as CNN
+from repro.core.adaptive import WorkingPoint, shared_point_executables
+from repro.core.flow import DesignFlow
+from repro.core.ir import Graph
+from repro.core.reader import cnn_to_ir, mlp_to_ir
+from repro.core.writers.jax_writer import JaxWriter
+from repro.core.writers.qjax_writer import QJaxContext, QJaxWriter, im2col
+from repro.kernels.qmatmul import ops as qops
+from repro.kernels.qmatmul.ops import pick_blocks, qgemm, resolve_interpret
+from repro.kernels.qmatmul.ref import epilogue_ref, qgemm_ref
+from repro.models import cnn
+from repro.quant.fixedpoint import fake_quant
+from repro.quant.pack import PackedWeights
+from repro.quant.ptq import derive_view
+from repro.quant.qtypes import DatatypeConfig, QType
+
+POINTS = [WorkingPoint("w8", 8), WorkingPoint("w4", 4), WorkingPoint("w2", 2)]
+
+
+def _quantize(w):
+    s = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8) / 127.0
+    codes = jnp.clip(jnp.round(w / s), -127, 127).astype(jnp.int8)
+    return codes, s
+
+
+def _cnn_graph(seed=0):
+    params = cnn.init_params(CNN, jax.random.PRNGKey(seed))
+    return cnn_to_ir(CNN, {k: np.asarray(v) for k, v in params.items()})
+
+
+def _float_copy_reference(qwriter, bits, act_ranges=None):
+    """The fake-quant baseline over the SAME quantizer: a plain JaxWriter
+    whose initializers are the packed weights dequantized at ``bits``."""
+    g = qwriter.graph
+    deq = {k: np.asarray(v) for k, v in qwriter.packed.dequantized(bits).items()}
+    g2 = Graph(g.name, g.nodes, g.inputs, g.outputs, deq)
+    return JaxWriter(g2, DatatypeConfig(qwriter.dt.act_bits, 32),
+                     act_ranges or qwriter.act_ranges).build()
+
+
+# ---------------------------------------------------------------------------
+# ops / kernel level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+@pytest.mark.parametrize("relu,with_bias,with_aqt", [
+    (False, False, False), (True, True, True), (False, True, True),
+    (True, False, True)])
+def test_qgemm_kernel_epilogue_matches_ref(bits, relu, with_bias, with_aqt):
+    """Forced interpret-mode kernel vs the jnp oracle, epilogue included."""
+    x = jax.random.normal(jax.random.PRNGKey(bits), (128, 256), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 128), jnp.float32)
+    codes, s = _quantize(w)
+    bias = (jax.random.normal(jax.random.PRNGKey(2), (128,)) * 0.1
+            if with_bias else None)
+    aqt = (10, -(2 ** 15), 2 ** 15 - 1) if with_aqt else None
+    y_k = qgemm(x, codes, s, bias, bits=bits, relu=relu, act_qt=aqt,
+                interpret=True, use_kernel=True)
+    y_r = qgemm_ref(x, codes, s, bias, bits=bits, relu=relu, act_qt=aqt)
+    # kernel casts activations to bf16: 1-ulp-of-max bf16 tolerance
+    tol = float(jnp.max(jnp.abs(y_r))) * 2 ** -7 + 1e-6
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), atol=tol)
+
+
+def test_epilogue_matches_fixedpoint_fake_quant():
+    """The fused activation quant must be bit-identical to fake_quant."""
+    qt = QType(16, 10)
+    y = jax.random.normal(jax.random.PRNGKey(0), (64, 64)) * 40.0
+    fused = epilogue_ref(y, relu=True, act_qt=(qt.frac, qt.qmin, qt.qmax))
+    manual = fake_quant(jnp.maximum(y, 0.0), qt)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(manual))
+
+
+def test_resolve_interpret_is_backend_aware():
+    # CPU/GPU test envs must auto-select interpret; explicit values win
+    auto = resolve_interpret(None)
+    assert auto == (jax.default_backend() != "tpu")
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+def test_pick_blocks_caches_and_divides():
+    qops._BLOCK_CACHE.clear()
+    bm, bn, bk = pick_blocks(256, 512, 384, 8, interpret=True)
+    assert 256 % bm == 0 and 384 % bn == 0 and 512 % bk == 0
+    # the interpret flag is part of the key: an interpret-mode default must
+    # not pin the untuned blocks for later compiled calls of the same shape
+    assert (256, 512, 384, 8, True) in qops._BLOCK_CACHE
+    assert (256, 512, 384, 8, False) not in qops._BLOCK_CACHE
+    assert pick_blocks(256, 512, 384, 8, interpret=True) == (bm, bn, bk)
+
+
+def test_qgemm_small_shapes_fall_back_to_ref():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 6), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (6, 4), jnp.float32)
+    codes, s = _quantize(w)
+    y = qgemm(x, codes, s, bits=8, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(qgemm_ref(x, codes, s, bits=8)))
+
+
+def test_im2col_matches_xla_conv():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 9, 9, 3))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 5)) * 0.2
+    patches, oh, ow = im2col(x, 3, 3, (1, 1), "SAME")
+    y = patches.reshape(-1, 27) @ w.reshape(27, 5)
+    ref = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(y.reshape(2, oh, ow, 5)),
+                               np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# PackedWeights: nested views, one buffer
+# ---------------------------------------------------------------------------
+
+def test_nested_view_truncation_property():
+    """W4 codes must be the truncation of the W8 master (and W2 of it)."""
+    packed = PackedWeights.from_initializers(_cnn_graph().initializers)
+    assert packed.tensors, "CNN graph must have packed weights"
+    for name, t in packed.tensors.items():
+        np.testing.assert_array_equal(np.asarray(t.view(8)),
+                                      np.asarray(t.codes))
+        for bits in (4, 2):
+            np.testing.assert_array_equal(
+                np.asarray(t.view(bits)),
+                np.asarray(derive_view(t.codes, bits)), err_msg=name)
+            # nested: every low-bit code lies on the 2^(8-bits) grid
+            step = 1 << (8 - bits)
+            assert int(jnp.max(jnp.abs(t.view(bits)).astype(jnp.int32)
+                               % step)) == 0
+
+
+def test_biases_and_norm_stats_pass_through():
+    packed = PackedWeights.from_initializers(_cnn_graph().initializers)
+    assert "conv0/b" in packed.passthrough
+    assert "bn0/mean" in packed.passthrough
+    assert "conv0/w" in packed.tensors and "fc/w" in packed.tensors
+
+
+# ---------------------------------------------------------------------------
+# writer-level differential: packed path == fake-quant reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_qjax_ref_path_bitexact_vs_fake_quant_reference(bits):
+    g = _cnn_graph()
+    x = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (3, 28, 28, 1)),
+                   np.float32)
+    w = QJaxWriter(g, DatatypeConfig(16, 8), use_kernel=False)
+    got = np.asarray(w.build(bits=bits)(x))
+    ref = np.asarray(_float_copy_reference(w, bits)(x))
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_qjax_kernel_path_matches_fake_quant_reference(bits):
+    """Forced interpret-mode Pallas kernels end to end (bf16 activations in
+    the MXU tiles -> ulp-of-max tolerance)."""
+    g = _cnn_graph()
+    x = np.asarray(jax.random.uniform(jax.random.PRNGKey(2), (1, 28, 28, 1)),
+                   np.float32)
+    w = QJaxWriter(g, DatatypeConfig(16, 8), use_kernel=True, interpret=True)
+    got = np.asarray(w.build(bits=bits)(x))
+    ref = np.asarray(_float_copy_reference(w, bits)(x))
+    tol = np.max(np.abs(ref)) * 2 ** -7 + 1e-6
+    np.testing.assert_allclose(got, ref, atol=tol)
+
+
+def test_qjax_mlp_gemm_chain_bitexact():
+    rng = np.random.default_rng(0)
+    sizes = [12, 16, 8, 4]
+    params = {}
+    for i in range(len(sizes) - 1):
+        params[f"fc{i}/w"] = rng.normal(
+            size=(sizes[i], sizes[i + 1])).astype(np.float32)
+        params[f"fc{i}/b"] = rng.normal(size=(sizes[i + 1],)).astype(np.float32)
+    g = mlp_to_ir(sizes, params)
+    x = rng.random((5, 12), np.float32)
+    w = QJaxWriter(g, DatatypeConfig(16, 8), use_kernel=False)
+    for bits in (8, 4, 2):
+        got = np.asarray(w.build(bits=bits)(x))
+        ref = np.asarray(_float_copy_reference(w, bits)(x))
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_act_quant_fused_into_epilogue_not_reapplied():
+    g = _cnn_graph()
+    x = np.asarray(jax.random.uniform(jax.random.PRNGKey(3), (2, 28, 28, 1)),
+                   np.float32)
+    w = QJaxWriter(g, DatatypeConfig(16, 8), use_kernel=False)
+    y = w.build()(x)
+    # every FusedConv/Gemm output was claimed by a kernel epilogue
+    fused_ops = {n.outputs[0] for n in w.graph.topo_order()
+                 if n.op in ("Conv", "FusedConv", "Gemm", "MatMul")}
+    assert fused_ops <= w._fused_act
+    # and the fused quant is idempotent: re-applying _act_q changes nothing
+    w._fused_act.clear()
+    node = next(n for n in w.graph.topo_order() if n.op == "Gemm")
+    np.testing.assert_array_equal(
+        np.asarray(w._act_q(node.outputs[0], y, node)), np.asarray(y))
+
+
+def test_default_bits_follows_dtconfig():
+    g = _cnn_graph()
+    assert QJaxWriter(g).default_bits == 8
+    assert QJaxWriter(g, DatatypeConfig(16, 4)).default_bits == 4
+    assert QJaxWriter(g, DatatypeConfig(16, 16)).default_bits == 8
+    w = QJaxWriter(g, DatatypeConfig(16, 4))
+    # per-layer cap composes with the runtime point: min(point, layer)
+    assert QJaxContext(w, 8).weight_bits(None) == 4
+    assert QJaxContext(w, 2).weight_bits(None) == 2
+
+
+def test_reference_writers_reject_bits_parameter():
+    g = _cnn_graph()
+    with pytest.raises(ValueError, match="packed-weight"):
+        JaxWriter(g).build(bits=8)
+
+
+# ---------------------------------------------------------------------------
+# shared weight buffer across working points (the MDC merge, acceptance)
+# ---------------------------------------------------------------------------
+
+def test_point_executables_share_one_packed_buffer():
+    res = DesignFlow(_cnn_graph()).run(targets=("qjax",),
+                                       dtconfig=DatatypeConfig(16, 8))
+    writer = res.writers["qjax"]
+    pts = shared_point_executables(writer, POINTS)
+    # buffer identity: every point reads the SAME master code arrays
+    for name, t in writer.packed.tensors.items():
+        ids = {id(pts[p.name].packed.tensors[name].codes) for p in POINTS}
+        assert len(ids) == 1, f"{name} duplicated across points"
+    assert [pts[p.name].bits for p in POINTS] == [8, 4, 2]
+    # size accounting: a 3-point server holds ~1/3 of per-point copies
+    rep = writer.packed.sharing_report(len(POINTS))
+    assert rep["shared_bytes"] * 3 == rep["per_point_copy_bytes"]
+    assert rep["shared_bytes"] / rep["per_point_copy_bytes"] <= 0.34
+    # and far less than the legacy per-point fake-quant f32 copies the
+    # writers used to bake into each executable (the empirical ratio)
+    assert rep["sharing_ratio"] * rep["shared_bytes"] == rep["per_point_f32_bytes"]
+    assert rep["sharing_ratio"] > 3.0
+
+
+def test_shared_points_require_packed_writer():
+    res = DesignFlow(_cnn_graph()).run(targets=("jax",))
+    with pytest.raises(TypeError, match="packed"):
+        shared_point_executables(res.writers["jax"], POINTS)
+    with pytest.raises(KeyError, match="qjax"):
+        res.serve_adaptive(POINTS)
+
+
+def test_serve_adaptive_switches_bits_with_zero_weight_copies():
+    from repro.core.adaptive import RuntimePolicy
+    res = DesignFlow(_cnn_graph()).run(targets=("qjax",),
+                                       dtconfig=DatatypeConfig(16, 8))
+    srv = res.serve_adaptive(
+        POINTS, policy=RuntimePolicy(POINTS, thresholds=[0.66, 0.33]),
+        max_batch=4, max_wait=0.0)
+    x = np.asarray(jax.random.uniform(jax.random.PRNGKey(4), (2, 28, 28, 1)),
+                   np.float32)
+    outs = {}
+    for budget, point in ((1.0, "w8"), (0.5, "w4"), (0.1, "w2")):
+        t = srv.submit(x, budget=budget)
+        srv.pump(flush=True)
+        outs[point] = np.asarray(srv.result(t))
+    stats = srv.stats()
+    assert stats["points"] == {"w8": 1, "w4": 1, "w2": 1}
+    assert stats["bits_views"] == {8: 1, 4: 1, 2: 1}
+    assert [r.bits for r in srv.reports] == [8, 4, 2]
+    # each batch executed the right working point: outputs match the
+    # per-bits builds of the same writer (no weight movement in between)
+    writer = res.writers["qjax"]
+    for point, bits in (("w8", 8), ("w4", 4), ("w2", 2)):
+        np.testing.assert_allclose(
+            outs[point], np.asarray(writer.build(bits=bits)(x)), atol=1e-6)
+
+
+def test_qjax_flow_agrees_with_float_reference():
+    """End-to-end sanity: the packed engine at W8/D32 stays close to the
+    float pipeline (quantization error only, no structural drift)."""
+    g = _cnn_graph()
+    x = np.asarray(jax.random.uniform(jax.random.PRNGKey(5), (4, 28, 28, 1)),
+                   np.float32)
+    res = DesignFlow(g).run(targets=("jax", "qjax"))
+    y_f = np.asarray(res.batched["jax"](x))
+    y_q = np.asarray(res.batched["qjax"](x))
+    scale = np.max(np.abs(y_f)) + 1e-9
+    assert np.max(np.abs(y_f - y_q)) / scale < 0.05
+    assert np.mean(np.argmax(y_f, -1) == np.argmax(y_q, -1)) == 1.0

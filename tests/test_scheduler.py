@@ -345,3 +345,79 @@ def test_batch_budget_is_most_constrained_member():
     srv.submit(req(2), budget=0.2)  # constrained member drags the batch down
     srv.pump(flush=True)
     assert [r.point for r in srv.reports] == ["w2"]
+
+
+# ---------------------------------------------------------------------------
+# best-fit packing (BucketPolicy.packing="best_fit")
+# ---------------------------------------------------------------------------
+
+
+def test_best_fit_dispatches_min_waste_prefix():
+    # sizes [4, 3]: fifo packs both (7 rows -> bucket 8, waste 1); best-fit
+    # stops at [4] (bucket 4, waste 0) and serves [3] from the next batch
+    sched = CoalescingScheduler(
+        max_batch=8, max_wait=1e9, clock=FakeClock(), packing="best_fit"
+    )
+    for n in (4, 3):
+        sched.submit((req(n),))
+    first = sched.ready(flush=True)
+    assert [r.size for r in first.requests] == [4]
+    assert first.bucket == 4 and first.padding == 0
+    second = sched.ready(flush=True)
+    assert [r.size for r in second.requests] == [3]
+
+
+def test_best_fit_tie_prefers_longer_prefix():
+    # [2, 2]: prefix [2] (bucket 2, waste 0) ties with [2, 2] (bucket 4,
+    # waste 0) -> the longer prefix wins (more requests per dispatch)
+    sched = CoalescingScheduler(
+        max_batch=8, max_wait=1e9, clock=FakeClock(), packing="best_fit"
+    )
+    for _ in range(2):
+        sched.submit((req(2),))
+    batch = sched.ready(flush=True)
+    assert [r.size for r in batch.requests] == [2, 2]
+    assert batch.padding == 0
+
+
+def test_best_fit_never_reorders_the_queue():
+    # arrival order is preserved: best-fit only picks a PREFIX length, so the
+    # head request is always in the dispatched batch (no starvation)
+    sched = CoalescingScheduler(
+        max_batch=8, max_wait=1e9, clock=FakeClock(), packing="best_fit"
+    )
+    for n in (3, 4, 1):
+        sched.submit((req(n),))
+    batch = sched.ready(flush=True)
+    assert batch.requests[0].size == 3
+
+
+def test_fifo_stays_the_default_packing():
+    sched = CoalescingScheduler(max_batch=8, max_wait=1e9, clock=FakeClock())
+    for n in (4, 3):
+        sched.submit((req(n),))
+    batch = sched.ready(flush=True)
+    assert [r.size for r in batch.requests] == [4, 3]
+    with pytest.raises(ValueError):
+        BucketPolicy(max_batch=8, packing="round_robin")
+
+
+def test_accel_server_passes_packing_through():
+    res = mlp_flow()
+    srv = AccelServer(
+        res.batched["jax"],
+        max_batch=8,
+        max_wait=1e9,
+        clock=FakeClock(),
+        packing="best_fit",
+    )
+    t4, t3 = srv.submit(req(4)), srv.submit(req(3, seed=1))
+    srv.pump(flush=True)
+    assert [r.rows for r in srv.reports] == [4, 3]  # two min-waste batches
+    ref = res.executables["jax"]
+    np.testing.assert_allclose(
+        np.asarray(srv.result(t4)), np.asarray(ref(req(4))), atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(srv.result(t3)), np.asarray(ref(req(3, seed=1))), atol=1e-5
+    )
