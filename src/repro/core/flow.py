@@ -132,7 +132,14 @@ class DesignFlow:
 
     def calibrate(self, *calib_inputs, graph: Optional[Graph] = None
                   ) -> Dict[str, float]:
-        """Run the float reference once, record per-FIFO activation ranges."""
+        """Run the float reference once, record per-FIFO activation ranges.
+
+        The ranges feed every quantizing writer: the f32 fake-quant path
+        derives each FIFO's Qm.n split from them, and the fully-integer
+        ``qjax`` path turns them into per-FIFO int8 activation-*code* scales
+        (:func:`repro.quant.ptq.act_code_qtype`) that the kernels fold into
+        their per-channel weight scales — calibration is what lets codes,
+        not floats, flow between layers."""
         w = JaxWriter(graph if graph is not None else self.graph)
         _, env = w.build(capture=True)(*calib_inputs)
         return {k: float(jnp.max(jnp.abs(v)))

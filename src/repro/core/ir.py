@@ -76,6 +76,8 @@ SUPPORTED_OPS = {
     # produced by the fusion pass: Conv with folded BatchNormalization
     # (+ optional trailing Relu, attrs["relu"]=True)
     "FusedConv",
+    # produced by the fusion pass: Gemm with a folded trailing Relu
+    "FusedGemm",
 }
 
 

@@ -26,7 +26,7 @@ from typing import Callable, List, Sequence
 
 from repro.core.ir import Graph
 from repro.core.passes.cleanup import eliminate_dead_nodes, fold_constants
-from repro.core.passes.fusion import fuse_conv_bn_relu
+from repro.core.passes.fusion import fuse_conv_bn_relu, fuse_gemm_relu
 from repro.core.passes.precision import (explore_mixed_precision,
                                          make_assign_precision,
                                          quantizable_layers, strip_precision)
@@ -49,22 +49,23 @@ class PassManager:
 
 
 def default_pipeline(dtconfig=None) -> List[GraphPass]:
-    """The standard compile pipeline: fuse, fold, sweep, annotate shapes,
-    assign per-layer precision."""
-    return [fuse_conv_bn_relu, fold_constants, eliminate_dead_nodes,
-            infer_shapes, make_assign_precision(dtconfig)]
+    """The standard compile pipeline: fuse (conv chains, then gemm+relu),
+    fold, sweep, annotate shapes, assign per-layer precision."""
+    return [fuse_conv_bn_relu, fuse_gemm_relu, fold_constants,
+            eliminate_dead_nodes, infer_shapes,
+            make_assign_precision(dtconfig)]
 
 
 def structural_pipeline() -> List[GraphPass]:
     """The graph rewrites only (no precision annotation) — what the
     mixed-precision explorer runs before searching datatypes."""
-    return [fuse_conv_bn_relu, fold_constants, eliminate_dead_nodes,
-            infer_shapes]
+    return [fuse_conv_bn_relu, fuse_gemm_relu, fold_constants,
+            eliminate_dead_nodes, infer_shapes]
 
 
 __all__ = [
     "GraphPass", "PassManager", "default_pipeline", "structural_pipeline",
-    "infer_shapes", "fuse_conv_bn_relu", "fold_constants",
+    "infer_shapes", "fuse_conv_bn_relu", "fuse_gemm_relu", "fold_constants",
     "eliminate_dead_nodes", "make_assign_precision",
     "explore_mixed_precision", "quantizable_layers", "strip_precision",
 ]

@@ -17,6 +17,11 @@ The paper's CNN interleaves a MaxPool between the Conv and the BN
 guarded by an explicit ``inv > 0`` check per channel (negative BN scales fall
 back to the unfused form).  All intermediate FIFOs must have exactly one
 consumer and must not be graph outputs.
+
+:func:`fuse_gemm_relu` is the MLP-topology analogue (Table I): a ``Gemm``
+whose single consumer is a ``Relu`` becomes one ``FusedGemm`` actor, so the
+fully-connected stack reaches the fused kernel epilogue (bias + ReLU +
+activation quant in-VMEM) the same way FusedConv does.
 """
 from __future__ import annotations
 
@@ -33,6 +38,37 @@ def _single_consumer(graph: Graph, tensor: str) -> Optional[Node]:
         return None
     cs = graph.consumer_index().get(tensor, [])
     return cs[0] if len(cs) == 1 else None
+
+
+def fuse_gemm_relu(graph: Graph) -> Graph:
+    """Fold ``Gemm -> Relu`` chains into single ``FusedGemm`` nodes.
+
+    Pure graph surgery (no weight rewrite): the FusedGemm keeps the Gemm's
+    inputs and name, takes the Relu's output tensor, and records the fold in
+    ``attrs["relu"]`` / ``attrs["fused_from"]`` — the same contract FusedConv
+    uses, so every writer's fused-epilogue machinery applies unchanged."""
+    drop = set()
+    fused: Dict[str, Node] = {}
+    for gemm in graph.nodes:
+        if gemm.op != "Gemm":
+            continue
+        relu = _single_consumer(graph, gemm.outputs[0])
+        if relu is None or relu.op != "Relu":
+            continue
+        attrs = dict(gemm.attrs)
+        attrs["relu"] = True
+        attrs["fused_from"] = [relu.name]
+        fused[gemm.name] = Node("FusedGemm", gemm.name, list(gemm.inputs),
+                                [relu.outputs[0]], attrs,
+                                dtconfig=gemm.dtconfig)
+        drop.add(relu.name)
+    if not fused:
+        return graph
+    nodes = [fused.get(n.name, n) for n in graph.nodes if n.name not in drop]
+    g = Graph(graph.name, nodes, graph.inputs, graph.outputs,
+              graph.initializers)
+    g.validate()
+    return g
 
 
 def fuse_conv_bn_relu(graph: Graph) -> Graph:

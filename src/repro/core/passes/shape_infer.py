@@ -73,6 +73,7 @@ def _shape_elementwise(node: Node, ins: List[Shape]) -> List[Shape]:
 
 
 @_rule("Gemm")
+@_rule("FusedGemm")
 @_rule("MatMul")
 def _shape_matmul(node: Node, ins: List[Shape]) -> List[Shape]:
     x, w = ins[0], ins[1]

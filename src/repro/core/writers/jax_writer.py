@@ -179,6 +179,13 @@ class JaxWriter:
         qt = fixed_for_range(bits, self.act_ranges.get(name, 8.0))
         return fake_quant(x, qt)
 
+    def _materialize(self, value):
+        """Hook: convert one graph *output* to its caller-facing form.  The
+        reference writers return values as-is; the packed-weight writer's
+        fully-integer mode decodes inter-layer int8 activation codes to float
+        here — the ONE place the hot path materializes floats."""
+        return value
+
     # -- build --------------------------------------------------------------
     def _env_seed(self, bits: Optional[int] = None) -> Dict[str, Any]:
         """The environment a built executable starts from.  ``bits`` selects
@@ -208,7 +215,7 @@ class JaxWriter:
                 outs = y if isinstance(y, tuple) else (y,)
                 for oname, oval in zip(node.outputs, outs):
                     env[oname] = self._act_q(oname, oval, node)
-            outs = tuple(env[o] for o in self.graph.outputs)
+            outs = tuple(self._materialize(env[o]) for o in self.graph.outputs)
             if capture:
                 return outs[0] if len(outs) == 1 else outs, env
             return outs[0] if len(outs) == 1 else outs

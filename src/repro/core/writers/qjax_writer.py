@@ -6,10 +6,10 @@ per-output-channel scales (:class:`~repro.quant.pack.PackedWeights`), and the
 hot-path ops run the dequant-fused :mod:`repro.kernels.qmatmul` kernels over
 those codes instead of an f32 ``@``/``conv`` over fake-quantized float copies:
 
-* ``Gemm`` / ``MatMul`` call ``qgemm`` on the packed codes — the ``bits``-bit
-  view is truncated in-VMEM, the per-channel rescale, bias and the
-  consumer-side fixed-point activation quant happen in the kernel epilogue
-  (no separate round/clip op per FIFO);
+* ``Gemm`` / ``MatMul`` / ``FusedGemm`` call ``qgemm`` on the packed codes —
+  the ``bits``-bit view is truncated in-VMEM, the per-channel rescale, bias,
+  folded ReLU and the consumer-side fixed-point activation quant happen in
+  the kernel epilogue (no separate round/clip op per FIFO);
 * ``Conv`` / ``FusedConv`` lower to im2col + ``qgemm`` with the folded ReLU
   fused into the same epilogue (kernel path), or to an XLA conv over the
   dequantized view (ref path — XLA folds the dequant of constant codes into
@@ -18,7 +18,21 @@ those codes instead of an f32 ``@``/``conv`` over fake-quantized float copies:
   ``build_batched``, NOT baked into the weights: every point executable
   reads the SAME :class:`PackedWeights` buffer, so ``AccelServer`` switching
   W8 -> W4 -> W2 per batch moves no weights and holds ~N× less memory than
-  per-point copies.
+  per-point copies.  At W4/W2 the streamed buffer is the *sub-byte packed*
+  view (``PackedTensor.packed_view``) unpacked in-VMEM — resident weight
+  bytes drop to ~1/2 and ~1/4 of the W8 codes.
+
+Fully-integer mode (``int8_act``, auto-enabled when the working point's
+activation precision fits int8, i.e. ``Dx <= 8``): inter-layer tensors are
+:class:`ActCode` — the producer FIFO's int8 fixed-point codes plus a static
+power-of-two scale from calibration.  Hot ops consume the codes directly
+(``qmatmul_int8_act``: int32 MACs on the MXU int8 path, the producer scale
+folded into the per-channel weight scale) and their epilogue re-quantizes to
+the consumer's code, so codes — never f32 tensors — flow between layers.
+Code-domain ops with exact integer semantics (MaxPool, Relu, Flatten) operate
+on the codes in place; anything without an integer implementation gets its
+inputs decoded on entry (the documented float-materialization points: graph
+outputs and non-integer actors).
 
 Backend selection: compiled Pallas on TPU; off-TPU the jnp reference path
 (``use_kernel``/``interpret`` writer kwargs override, e.g. forced
@@ -26,6 +40,7 @@ interpret-mode kernels in tests).
 """
 from __future__ import annotations
 
+from collections import ChainMap
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -34,15 +49,67 @@ import jax.numpy as jnp
 
 from repro.core.ir import Graph, Node
 from repro.core.writers.jax_writer import BatchedExecutable, JaxWriter
-from repro.core.writers.registry import register_op, resolve
-from repro.kernels.qmatmul.ops import qgemm, resolve_interpret
-from repro.kernels.qmatmul.ref import epilogue_ref
-from repro.quant.pack import PackedTensor, PackedWeights
-from repro.quant.qtypes import DatatypeConfig, fixed_for_range
+from repro.core.writers.registry import OP_REGISTRY, register_op, resolve
+from repro.kernels.qmatmul.ops import (qgemm, qmatmul_int8_act,
+                                       resolve_interpret)
+from repro.kernels.qmatmul.ref import epilogue_ref, exact_in_f32
+from repro.quant.fixedpoint import quantize
+from repro.quant.pack import SUB_BYTE_BITS, PackedTensor, PackedWeights
+from repro.quant.ptq import act_code_qtype
+from repro.quant.qtypes import DatatypeConfig, QType, fixed_for_range
 
 # reserved env key carrying the writer context into the qjax op impls; graph
 # tensor names are ONNX-style identifiers and cannot collide with it
 QCTX = "__qctx__"
+
+
+@dataclass
+class ActCode:
+    """One inter-layer tensor of the fully-integer hot path: the producer
+    FIFO's int8 fixed-point codes plus their static power-of-two qtype.
+
+    ``value = codes * 2^-frac`` — but the hot path never materializes that
+    float: consumers MAC the codes in int32 and fold ``2^-frac`` into their
+    per-channel weight scales.  :meth:`to_float` exists for graph outputs and
+    ops without an integer implementation."""
+
+    codes: jax.Array   # int8, the tensor's shape
+    qt: QType          # static: bits <= 8, power-of-two scale 2^-frac
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def dtype(self):
+        return self.codes.dtype
+
+    @classmethod
+    def encode(cls, x, qt: QType) -> "ActCode":
+        """Float -> codes on the ``qt`` grid: exactly
+        ``fixedpoint.quantize`` (the fake-quant contract has ONE home),
+        narrowed to int8."""
+        assert qt.bits <= 8, f"activation codes need bits <= 8, got {qt}"
+        return cls(quantize(x.astype(jnp.float32), qt).astype(jnp.int8), qt)
+
+    def to_float(self, dtype=jnp.float32):
+        return self.codes.astype(dtype) * jnp.asarray(self.qt.scale, dtype)
+
+
+def _decoded(node: Node, env):
+    """Env view with this node's ActCode inputs decoded to float — the shim
+    that lets any reference op impl run mid-integer-graph (a documented
+    float-materialization point)."""
+    over = {}
+    for name in node.inputs:
+        v = env.get(name)
+        if isinstance(v, ActCode):
+            over[name] = v.to_float()
+    return ChainMap(over, env) if over else env
+
+
+def _jax_fallback(op: str, node: Node, env):
+    return resolve(op, "jax")(node, _decoded(node, env))
 
 
 @dataclass
@@ -73,6 +140,24 @@ class QJaxContext:
                              self.writer.act_ranges.get(name, 8.0))
         return (qt.frac, qt.qmin, qt.qmax)
 
+    def code_qt(self, name: str, node: Optional[Node]) -> Optional[QType]:
+        """The output FIFO's int8 activation-code qtype when this node should
+        emit codes (fully-integer mode, activation precision fits int8)."""
+        if not self.writer.int8_act_on:
+            return None
+        dt = self.writer.node_dt(node)
+        if dt.act_bits > 8:
+            return None
+        return act_code_qtype(dt.act_bits,
+                              self.writer.act_ranges.get(name, 8.0))
+
+    def weight_codes(self, w: PackedTensor, bits: int):
+        """(codes argument, packed flag) for the kernels: the sub-byte packed
+        view at W4/W2 when packed storage is on, else the int8 master."""
+        if self.writer.packed_storage and bits in SUB_BYTE_BITS:
+            return w.packed_view(bits), True
+        return w.codes_2d(), False
+
     def mark_fused(self, name: str) -> None:
         self.writer._fused_act.add(name)
 
@@ -95,7 +180,9 @@ def _pad_amounts(h: int, k: int, s: int, pads) -> Tuple[int, Tuple[int, int]]:
 
 def im2col(x, kh: int, kw: int, strides, pads):
     """x: (B, H, W, C) -> patches (B, OH, OW, kh*kw*C), dy-major then dx then
-    channel — the order HWIO weights flatten to for the (K, N) matmul."""
+    channel — the order HWIO weights flatten to for the (K, N) matmul.  Works
+    on float tensors and on int8 code tensors alike (zero padding is the zero
+    code)."""
     sh, sw = strides
     B, H, W, C = x.shape
     oh, (ph0, ph1) = _pad_amounts(H, kh, sh, pads if isinstance(pads, str)
@@ -115,19 +202,44 @@ def im2col(x, kh: int, kw: int, strides, pads):
 # qjax op implementations
 # ---------------------------------------------------------------------------
 
+def _int8_act_gemm(ctx: QJaxContext, node: Node, x: ActCode, w: PackedTensor,
+                   bias, relu: bool):
+    """The fully-integer Gemm lowering: producer codes in, consumer codes out
+    (float only when the output has no int8 code qtype)."""
+    out = node.outputs[0]
+    bits = ctx.weight_bits(node)
+    oqt = ctx.code_qt(out, node)
+    aqt = (oqt.frac, oqt.qmin, oqt.qmax) if oqt is not None \
+        else ctx.act_qt(out, node)
+    codes_arg, packed = ctx.weight_codes(w, bits)
+    y = qmatmul_int8_act(x.codes, x.qt.scale, codes_arg, w.scale_1d(), bias,
+                         bits=bits, relu=relu, act_qt=aqt,
+                         out_code=oqt is not None, packed=packed,
+                         interpret=ctx.writer.interpret,
+                         use_kernel=ctx.writer.kernel_enabled(),
+                         out_dtype=jnp.float32)
+    ctx.mark_fused(out)
+    return ActCode(y, oqt) if oqt is not None else y
+
+
 def _qgemm_node(node: Node, env, relu: bool = False):
-    """Shared Gemm/MatMul lowering; None when the weight is not packed
-    (activation×activation matmul, no context) so the caller falls back."""
+    """Shared Gemm/MatMul/FusedGemm lowering; None when the weight is not
+    packed (activation×activation matmul, no context) so the caller falls
+    back."""
     ctx = env.get(QCTX)
     w = env.get(node.inputs[1])
     if ctx is None or not isinstance(w, PackedTensor):
         return None
     x = env[node.inputs[0]]
     bias = env[node.inputs[2]] if len(node.inputs) > 2 else None
+    if isinstance(x, ActCode):
+        return _int8_act_gemm(ctx, node, x, w, bias, relu)
     out = node.outputs[0]
+    bits = ctx.weight_bits(node)
     aqt = ctx.act_qt(out, node)
-    y = qgemm(x, w.codes_2d(), w.scale_1d(), bias,
-              bits=ctx.weight_bits(node), relu=relu, act_qt=aqt,
+    codes_arg, packed = ctx.weight_codes(w, bits)
+    y = qgemm(x, codes_arg, w.scale_1d(), bias,
+              bits=bits, relu=relu, act_qt=aqt, packed=packed,
               interpret=ctx.writer.interpret,
               use_kernel=ctx.writer.kernel_enabled())
     ctx.mark_fused(out)
@@ -137,13 +249,66 @@ def _qgemm_node(node: Node, env, relu: bool = False):
 @register_op("Gemm", target="qjax")
 def _op_gemm_qjax(node: Node, env):
     y = _qgemm_node(node, env)
-    return y if y is not None else resolve("Gemm", "jax")(node, env)
+    return y if y is not None else _jax_fallback("Gemm", node, env)
 
 
 @register_op("MatMul", target="qjax")
 def _op_matmul_qjax(node: Node, env):
     y = _qgemm_node(node, env)
-    return y if y is not None else resolve("MatMul", "jax")(node, env)
+    return y if y is not None else _jax_fallback("MatMul", node, env)
+
+
+@register_op("FusedGemm", target="qjax")
+def _op_fused_gemm_qjax(node: Node, env):
+    y = _qgemm_node(node, env, relu=bool(node.attrs.get("relu")))
+    return y if y is not None else _jax_fallback("FusedGemm", node, env)
+
+
+def _int8_act_conv(ctx: QJaxContext, node: Node, x: ActCode, w: PackedTensor,
+                   bias, relu: bool, strides, pads):
+    """Fully-integer conv: integer MACs over the producer's codes.
+
+    Kernel path: im2col on the code tensor + ``qmatmul_int8_act`` (the fused
+    epilogue re-quantizes to the consumer's code).  Ref path: when the
+    reduction is small enough that integer accumulation is exact in f32
+    (:func:`exact_in_f32` — every MNIST/MLP layer qualifies), an XLA conv
+    over the f32-cast codes produces the SAME integer accumulator at XLA-conv
+    speed; otherwise it falls back to im2col + the int32 oracle."""
+    kh, kw, _, cout = w.codes.shape
+    k_dim = kh * kw * w.codes.shape[2]
+    out = node.outputs[0]
+    bits = ctx.weight_bits(node)
+    oqt = ctx.code_qt(out, node)
+    aqt = (oqt.frac, oqt.qmin, oqt.qmax) if oqt is not None \
+        else ctx.act_qt(out, node)
+    if ctx.writer.kernel_enabled() or not exact_in_f32(k_dim):
+        patches, oh, ow = im2col(x.codes, kh, kw, strides, pads)
+        codes_arg, packed = ctx.weight_codes(w, bits)
+        y = qmatmul_int8_act(patches.reshape(-1, patches.shape[-1]),
+                             x.qt.scale, codes_arg, w.scale_1d(), bias,
+                             bits=bits, relu=relu, act_qt=aqt,
+                             out_code=oqt is not None, packed=packed,
+                             interpret=ctx.writer.interpret,
+                             use_kernel=ctx.writer.kernel_enabled(),
+                             out_dtype=jnp.float32)
+        y = y.reshape(x.codes.shape[0], oh, ow, cout)
+    else:
+        acc = jax.lax.conv_general_dilated(
+            x.codes.astype(jnp.float32), w.view(bits).astype(jnp.float32),
+            window_strides=strides, padding=pads,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        # same scale fold as the ops wrapper: producer scale (a power of two)
+        # into the per-channel weight scale — bit-identical rounding
+        y = acc * (w.scale_1d() * x.qt.scale).reshape(1, 1, 1, -1)
+        if bias is not None:
+            y = y + bias
+        from repro.kernels.qmatmul.ref import epilogue_code_ref
+        if oqt is not None:
+            y = epilogue_code_ref(y, relu, aqt).astype(jnp.int8)
+        else:
+            y = epilogue_ref(y, relu, aqt)
+    ctx.mark_fused(out)
+    return ActCode(y, oqt) if oqt is not None else y
 
 
 def _qconv_node(node: Node, env, relu: bool):
@@ -156,6 +321,8 @@ def _qconv_node(node: Node, env, relu: bool):
     kh, kw, _, cout = w.codes.shape
     strides = tuple(node.attrs.get("strides", (1, 1)))
     pads = node.attrs.get("pads", "SAME")
+    if isinstance(x, ActCode):
+        return _int8_act_conv(ctx, node, x, w, bias, relu, strides, pads)
     out = node.outputs[0]
     bits = ctx.weight_bits(node)
     aqt = ctx.act_qt(out, node)
@@ -163,9 +330,10 @@ def _qconv_node(node: Node, env, relu: bool):
         # im2col + dequant-fused matmul; ReLU and the consumer-side
         # activation quant ride in the kernel epilogue
         patches, oh, ow = im2col(x, kh, kw, strides, pads)
+        codes_arg, packed = ctx.weight_codes(w, bits)
         y = qgemm(patches.reshape(-1, patches.shape[-1]),
-                  w.codes_2d(), w.scale_1d(), bias,
-                  bits=bits, relu=relu, act_qt=aqt,
+                  codes_arg, w.scale_1d(), bias,
+                  bits=bits, relu=relu, act_qt=aqt, packed=packed,
                   interpret=ctx.writer.interpret, use_kernel=True)
         y = y.reshape(x.shape[0], oh, ow, cout)
     else:
@@ -185,13 +353,47 @@ def _qconv_node(node: Node, env, relu: bool):
 @register_op("Conv", target="qjax")
 def _op_conv_qjax(node: Node, env):
     y = _qconv_node(node, env, relu=False)
-    return y if y is not None else resolve("Conv", "jax")(node, env)
+    return y if y is not None else _jax_fallback("Conv", node, env)
 
 
 @register_op("FusedConv", target="qjax")
 def _op_fused_conv_qjax(node: Node, env):
     y = _qconv_node(node, env, relu=bool(node.attrs.get("relu")))
-    return y if y is not None else resolve("FusedConv", "jax")(node, env)
+    return y if y is not None else _jax_fallback("FusedConv", node, env)
+
+
+# -- code-domain actors: exact integer semantics, no dequant ----------------
+
+@register_op("MaxPool", target="qjax")
+def _op_maxpool_qjax(node: Node, env):
+    x = env[node.inputs[0]]
+    if not isinstance(x, ActCode):
+        return _jax_fallback("MaxPool", node, env)
+    k = tuple(node.attrs["kernel_shape"])
+    s = tuple(node.attrs.get("strides", k))
+    # max commutes with the monotone positive-scale dequant: pooling the int8
+    # codes IS pooling the values
+    codes = jax.lax.reduce_window(
+        x.codes, jnp.int8(jnp.iinfo(jnp.int8).min), jax.lax.max,
+        (1, *k, 1), (1, *s, 1), "VALID")
+    return ActCode(codes, x.qt)
+
+
+@register_op("Relu", target="qjax")
+def _op_relu_qjax(node: Node, env):
+    x = env[node.inputs[0]]
+    if not isinstance(x, ActCode):
+        return _jax_fallback("Relu", node, env)
+    # relu(c * s) == max(c, 0) * s for s > 0, and 0 is exactly the zero code
+    return ActCode(jnp.maximum(x.codes, 0), x.qt)
+
+
+@register_op("Flatten", target="qjax")
+def _op_flatten_qjax(node: Node, env):
+    x = env[node.inputs[0]]
+    if not isinstance(x, ActCode):
+        return _jax_fallback("Flatten", node, env)
+    return ActCode(x.codes.reshape(x.codes.shape[0], -1), x.qt)
 
 
 # ---------------------------------------------------------------------------
@@ -206,7 +408,12 @@ class QJaxWriter(JaxWriter):
     * ``use_kernel`` — None (auto: Pallas on TPU, jnp ref elsewhere), True
       (force the kernel, interpret-mode off-TPU), False (force the ref path);
     * ``interpret``  — override for the Pallas interpret flag (None = auto);
-    * ``default_bits`` — working point used when ``build(bits=None)``.
+    * ``default_bits`` — working point used when ``build(bits=None)``;
+    * ``int8_act`` — None (auto: fully-integer inter-layer dataflow whenever
+      the default activation precision fits int8), True/False to force;
+    * ``packed_weights`` — None (auto: sub-byte packed W4/W2 buffers on the
+      kernel path), True/False to force (the ref path unpacks at trace time,
+      so forcing it on stays bit-exact).
     """
 
     target = "qjax"
@@ -216,10 +423,14 @@ class QJaxWriter(JaxWriter):
                  act_ranges: Optional[Dict[str, float]] = None, *,
                  use_kernel: Optional[bool] = None,
                  interpret: Optional[bool] = None,
-                 default_bits: Optional[int] = None):
+                 default_bits: Optional[int] = None,
+                 int8_act: Optional[bool] = None,
+                 packed_weights: Optional[bool] = None):
         self.use_kernel = use_kernel
         self.interpret = interpret
         self._default_bits = default_bits
+        self._int8_act = int8_act
+        self._packed_weights = packed_weights
         super().__init__(graph, dtconfig, act_ranges)
 
     # -- packed weights ------------------------------------------------------
@@ -253,6 +464,60 @@ class QJaxWriter(JaxWriter):
     def qpath(self) -> str:
         """Which execution path this writer resolves to on this backend."""
         return "pallas" if self.kernel_enabled() else "ref"
+
+    @property
+    def int8_act_on(self) -> bool:
+        """Fully-integer inter-layer dataflow: auto-on when the default
+        working point's activation precision fits int8 codes."""
+        if self._int8_act is not None:
+            return bool(self._int8_act)
+        return self.dt.act_bits <= 8
+
+    @property
+    def packed_storage(self) -> bool:
+        """Sub-byte packed W4/W2 weight residency (auto: kernel path only —
+        the ref path's dequant const-folds to f32 regardless)."""
+        if self._packed_weights is not None:
+            return bool(self._packed_weights)
+        return self.kernel_enabled()
+
+    # -- fully-integer dataflow ---------------------------------------------
+    def _act_q(self, name: str, x, node: Optional[Node] = None):
+        """In fully-integer mode the FIFO boundary *encodes* to int8 codes
+        (graph inputs; outputs of ops without an integer impl) instead of
+        fake-quantizing in f32 — downstream hot ops then consume codes.
+        Values already on a code grid (ActCode, fused epilogues) pass
+        through untouched."""
+        if isinstance(x, ActCode):
+            return x
+        if (self.int8_act_on and name not in self._fused_act
+                and hasattr(x, "dtype")
+                and jnp.issubdtype(x.dtype, jnp.floating)):
+            dt = self.node_dt(node)
+            if dt.act_bits <= 8:
+                qt = act_code_qtype(dt.act_bits, self.act_ranges.get(name, 8.0))
+                return ActCode.encode(x, qt)
+        return super()._act_q(name, x, node)
+
+    def _materialize(self, value):
+        """Graph outputs are the one place the integer hot path materializes
+        floats (the value is identical to the f32 fake-quant the float mode
+        would have produced — same grid, same code)."""
+        if isinstance(value, ActCode):
+            return value.to_float()
+        return value
+
+    def op_impl(self, op: str) -> Callable:
+        """Ops registered for the qjax target are code-aware; anything else
+        gets the decode shim so reference impls run mid-integer-graph."""
+        impl = super().op_impl(op)
+        if op in OP_REGISTRY.get(self.target, {}):
+            return impl
+
+        def shim(node, env, _impl=impl):
+            return _impl(node, _decoded(node, env))
+
+        return shim
 
     # -- build ---------------------------------------------------------------
     def _env_seed(self, bits: Optional[int] = None) -> Dict[str, Any]:

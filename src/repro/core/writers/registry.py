@@ -106,6 +106,17 @@ def _op_gemm(node: Node, env):
     return y
 
 
+@register_op("FusedGemm")
+def _op_fused_gemm(node: Node, env):
+    """Gemm with a trailing Relu folded in by the fusion pass — the MLP
+    (Table I) analogue of FusedConv: one actor, one FIFO hop, and the qjax
+    target runs the ReLU inside the kernel epilogue."""
+    y = _op_gemm(node, env)
+    if node.attrs.get("relu"):
+        y = jax.nn.relu(y)
+    return y
+
+
 @register_op("MatMul")
 def _op_matmul(node: Node, env):
     return env[node.inputs[0]] @ env[node.inputs[1]]

@@ -65,7 +65,7 @@ _CONV_OPS = ("Conv", "FusedConv")
 # consumers whose firing rule needs a sliding window of the input stream
 _WINDOWED_OPS = ("Conv", "FusedConv", "MaxPool")
 # consumers that reduce over the whole per-item activation vector
-_MATRIX_OPS = ("Gemm", "MatMul")
+_MATRIX_OPS = ("Gemm", "FusedGemm", "MatMul")
 
 
 class StreamWriter(JaxWriter):

@@ -2,15 +2,28 @@
 
 ``qmatmul(x, codes, scale, bits=…)`` handles arbitrary leading batch dims,
 pads M/K/N up to MXU-aligned tiles, and falls back to the jnp oracle for
-shapes too small to tile (CPU smoke paths).  ``qgemm`` is the writer-facing
-entry point: bias + ReLU + activation fake-quant fused into the kernel
-epilogue, backend-aware ``interpret`` selection (compiled on TPU, jnp-ref
-fallback off-TPU) and a small block-size autotune cache keyed on
-``(M, K, N, bits)``.
+shapes too small to tile (CPU smoke paths).  ``qgemm`` is the float-activation
+writer entry point: bias + ReLU + activation fake-quant fused into the kernel
+epilogue.  ``qmatmul_int8_act`` is the *fully-integer* entry point: the
+activation operand is the producer FIFO's int8 codes + a power-of-two scale,
+MACs run in int32, and ``out_code=True`` re-quantizes the output to the
+consumer's int8 code in the same epilogue — codes, not floats, flow between
+layers.  Both accept ``packed=True`` to stream split-row sub-byte W4/W2
+weight buffers (:func:`repro.quant.pack.pack_rows`) unpacked in-VMEM.
+
+All entry points share backend-aware ``interpret`` selection (compiled on
+TPU, jnp-ref fallback off-TPU) and a block-size autotune cache keyed on the
+padded problem.  The autotune cache is two-level: the in-process dict is L1,
+and timed results persist to a JSON file (``~/.cache/repro/autotune.json``,
+override with ``REPRO_AUTOTUNE_CACHE=<path>``, disable with
+``REPRO_AUTOTUNE_CACHE=off``) so compiled-backend tuning survives across
+processes.
 """
 from __future__ import annotations
 
 import functools
+import json
+import os
 import time
 from typing import Dict, Optional, Tuple
 
@@ -19,9 +32,14 @@ import jax.numpy as jnp
 
 from repro.kernels.qmatmul.kernel import (ActQt, build_call, DEFAULT_BM,
                                           DEFAULT_BN, DEFAULT_BK)
-from repro.kernels.qmatmul.ref import qgemm_ref, qmatmul_ref
+from repro.kernels.qmatmul.ref import (qgemm_ref, qmatmul_int8_act_ref,
+                                       qmatmul_ref)
+from repro.quant.pack import unpack_rows
 
 _MIN_TILE = 128
+
+__all__ = ["qmatmul", "qgemm", "qmatmul_int8_act", "pick_blocks",
+           "resolve_interpret", "ActQt"]
 
 
 def resolve_interpret(interpret: Optional[bool] = None) -> bool:
@@ -34,17 +52,75 @@ def resolve_interpret(interpret: Optional[bool] = None) -> bool:
 
 
 # -- block-size autotune ----------------------------------------------------
-# keyed on the padded problem (M, K, N, bits) plus the interpret flag (an
-# interpret-mode entry must not pin the untuned default for later compiled
-# calls of the same shape); populated by timing candidate tilings on
-# synthetic data the first time a shape is seen on a compiled backend, by
-# the static default in interpret mode (timing interpret-mode Pallas would
-# measure the emulator, not the hardware)
-_BLOCK_CACHE: Dict[Tuple[int, int, int, int, bool],
+# keyed on the padded problem (M, K, N, bits, int8_act, packed) plus the
+# interpret flag (an interpret-mode entry must not pin the untuned default
+# for later compiled calls of the same shape); populated by timing candidate
+# tilings on synthetic data the first time a shape is seen on a compiled
+# backend, by the static default in interpret mode (timing interpret-mode
+# Pallas would measure the emulator, not the hardware).  Timed entries are
+# write-through persisted to the disk cache (see module docstring) and
+# reloaded by later processes — the in-process dict stays the L1.
+_BLOCK_CACHE: Dict[Tuple[int, int, int, int, bool, bool, bool],
                    Tuple[int, int, int]] = {}
 
 _CANDIDATE_BLOCKS = ((128, 128, 512), (128, 256, 512), (256, 128, 512),
                      (128, 128, 256), (256, 256, 512))
+
+AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+# loaded disk state: {"path": resolved path or None, "data": {key: blocks}};
+# re-resolved when the env var changes (tests point it at tmp dirs)
+_disk_state: Dict[str, object] = {"path": False, "data": {}}
+
+
+def autotune_cache_path() -> Optional[str]:
+    """Resolved disk-cache path, or None when persistence is disabled."""
+    p = os.environ.get(AUTOTUNE_CACHE_ENV)
+    if p is None:
+        return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                            "autotune.json")
+    p = p.strip()
+    if p.lower() in ("", "0", "off", "none"):
+        return None
+    return os.path.expanduser(p)
+
+
+def _disk_key(key) -> str:
+    M, K, N, bits, int8_act, packed, _interp = key
+    return f"{M}:{K}:{N}:{bits}:{int(int8_act)}:{int(packed)}"
+
+
+def _disk_cache() -> Dict[str, Tuple[int, int, int]]:
+    path = autotune_cache_path()
+    if _disk_state["path"] != path:
+        data: Dict[str, Tuple[int, int, int]] = {}
+        if path is not None and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    raw = json.load(f)
+                data = {k: tuple(int(b) for b in v) for k, v in raw.items()
+                        if isinstance(v, (list, tuple)) and len(v) == 3}
+            except (OSError, ValueError):
+                data = {}   # corrupt/unreadable cache: retune, then rewrite
+        _disk_state["path"] = path
+        _disk_state["data"] = data
+    return _disk_state["data"]  # type: ignore[return-value]
+
+
+def _disk_put(key, blocks: Tuple[int, int, int]) -> None:
+    path = autotune_cache_path()
+    if path is None:
+        return
+    data = _disk_cache()
+    data[_disk_key(key)] = tuple(blocks)
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({k: list(v) for k, v in sorted(data.items())}, f,
+                      indent=1)
+        os.replace(tmp, path)   # atomic: concurrent tuners never see partials
+    except OSError:
+        pass                    # telemetry-grade persistence: never fail a call
 
 
 def _default_blocks(M: int, K: int, N: int) -> Tuple[int, int, int]:
@@ -61,14 +137,36 @@ def _time_call(call, args, iters: int = 3) -> float:
     return best
 
 
-def pick_blocks(M: int, K: int, N: int, bits: int,
-                interpret: bool) -> Tuple[int, int, int]:
+def _synth_args(M: int, K: int, N: int, int8_act: bool, packed: bool,
+                pack_ratio: int):
+    """Concrete operands for the timing pass (shapes match the real call)."""
+    if int8_act:
+        x = jax.random.randint(jax.random.PRNGKey(0), (M, K), -127, 128,
+                               jnp.int8)
+    else:
+        x = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.bfloat16)
+    if packed:
+        w = jax.random.randint(jax.random.PRNGKey(1), (K // pack_ratio, N),
+                               0, 256, jnp.int32).astype(jnp.uint8)
+    else:
+        w = jax.random.randint(jax.random.PRNGKey(1), (K, N), -127, 128,
+                               jnp.int8)
+    s = jnp.ones((1, N), jnp.float32)
+    return [x] * pack_ratio + [w, s]
+
+
+def pick_blocks(M: int, K: int, N: int, bits: int, interpret: bool,
+                int8_act: bool = False,
+                packed: bool = False) -> Tuple[int, int, int]:
     """(bm, bn, bk) for an M×K×N problem at a working point.
 
     All dims are already padded to multiples of ``_MIN_TILE``.  Results are
-    cached per (M, K, N, bits, interpret); the timing pass runs on synthetic
-    concrete data, so it is safe to call at trace time inside an outer jit."""
-    key = (M, K, N, bits, interpret)
+    cached per (M, K, N, bits, int8_act, packed, interpret); the timing pass
+    runs on synthetic concrete data, so it is safe to call at trace time
+    inside an outer jit.  Lookup order: in-process dict, then the on-disk
+    cache (compiled-backend entries only), then a timing sweep whose result
+    is written through to both."""
+    key = (M, K, N, bits, int8_act, packed, interpret)
     hit = _BLOCK_CACHE.get(key)
     if hit is not None:
         return hit
@@ -76,27 +174,29 @@ def pick_blocks(M: int, K: int, N: int, bits: int,
     if interpret:
         _BLOCK_CACHE[key] = default
         return default
+    disk = _disk_cache().get(_disk_key(key))
+    if disk is not None:
+        _BLOCK_CACHE[key] = disk
+        return disk
+    r = (8 // bits) if packed else 1
     cands = {default}
     for bm, bn, bk in _CANDIDATE_BLOCKS:
         bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
-        if M % bm == 0 and N % bn == 0 and K % bk == 0:
+        if M % bm == 0 and N % bn == 0 and K % bk == 0 and bk % r == 0:
             cands.add((bm, bn, bk))
     if len(cands) == 1:
         _BLOCK_CACHE[key] = default
         return default
-    kx = jax.random.PRNGKey(0)
-    x = jax.random.normal(kx, (M, K), jnp.bfloat16)
-    w = jax.random.randint(jax.random.PRNGKey(1), (K, N), -127, 128,
-                           jnp.int8)
-    s = jnp.ones((1, N), jnp.float32)
+    args = _synth_args(M, K, N, int8_act, packed, r)
     best, best_t = default, float("inf")
     for bm, bn, bk in sorted(cands):
-        call = build_call(M, K, N, bits=bits, int8_act=False,
-                          bm=bm, bn=bn, bk=bk, interpret=False)
-        t = _time_call(call, (x, w, s))
+        call = build_call(M, K, N, bits=bits, int8_act=int8_act,
+                          bm=bm, bn=bn, bk=bk, interpret=False, packed=packed)
+        t = _time_call(call, args)
         if t < best_t:
             best, best_t = (bm, bn, bk), t
     _BLOCK_CACHE[key] = best
+    _disk_put(key, best)
     return best
 
 
@@ -137,16 +237,18 @@ def qmatmul(x, codes, scale, *, bits: int = 8,
 
 @functools.partial(jax.jit, static_argnames=("bits", "relu", "act_qt",
                                              "interpret", "use_kernel",
-                                             "bm", "bn", "bk"))
+                                             "packed", "bm", "bn", "bk"))
 def qgemm(x, codes, scale, bias=None, *, bits: int = 8, relu: bool = False,
           act_qt: Optional[ActQt] = None, interpret: Optional[bool] = None,
-          use_kernel: Optional[bool] = None,
+          use_kernel: Optional[bool] = None, packed: bool = False,
           bm: Optional[int] = None, bn: Optional[int] = None,
           bk: Optional[int] = None):
-    """Packed-weight Gemm with the fused epilogue — the execution engine's
+    """Packed-weight Gemm with the fused epilogue — the float-activation
     hot-path op.
 
-    x: (..., K) float; codes: (K, N) int8 master; scale: (N,) f32; bias:
+    x: (..., K) float; codes: (K, N) int8 master — or, with ``packed=True``,
+    the split-row sub-byte buffer (K'/r, N) uint8 where K' is K padded to the
+    tile size (:func:`repro.quant.pack.pack_rows`); scale: (N,) f32; bias:
     (N,) or None.  ``use_kernel=None`` auto-selects: the compiled Pallas
     kernel on TPU, the jnp reference (which XLA constant-folds into a plain
     matmul when codes are trace constants) elsewhere.  ``act_qt`` is the
@@ -154,46 +256,127 @@ def qgemm(x, codes, scale, bias=None, *, bits: int = 8, relu: bool = False,
     applied inside the kernel epilogue instead of as a separate round/clip
     op per FIFO."""
     lead = x.shape[:-1]
-    K, N = codes.shape
+    K = x.shape[-1]
+    N = codes.shape[-1]
+    r = (8 // bits) if packed else 1
+    if not packed:
+        assert codes.shape[0] == K, (
+            f"weight rows {codes.shape[0]} != reduction dim {K}")
     x2 = x.reshape(-1, K)
     M = x2.shape[0]
     interp = resolve_interpret(interpret)
     if use_kernel is None:
         use_kernel = not interp
     if not use_kernel or min(M, K, N) < 8:
-        y = qgemm_ref(x2, codes, scale, bias, bits=bits, relu=relu,
+        c = unpack_rows(codes, bits)[:K] if packed else codes
+        y = qgemm_ref(x2, c, scale, bias, bits=bits, relu=relu,
                       act_qt=act_qt, out_dtype=x.dtype)
         return y.reshape(*lead, N)
     xp = _pad_to(_pad_to(x2, _MIN_TILE, 0), _MIN_TILE, 1)
-    cp = _pad_to(_pad_to(codes, _MIN_TILE, 0), _MIN_TILE, 1)
-    sp = _pad_to(scale.reshape(1, -1).astype(jnp.float32), _MIN_TILE, 1)
-    Mp, Kp, Np = xp.shape[0], xp.shape[1], cp.shape[1]
+    Mp, Kp = xp.shape
+    if packed:
+        assert codes.shape[0] * r == Kp, (
+            f"packed weight rows {codes.shape[0]} (x{r}) do not cover the "
+            f"padded reduction dim {Kp}")
+        cp = _pad_to(codes, _MIN_TILE, 1)
+        # the packed fields are q = view / step: fold the power-of-two step
+        # into the channel scale (exact in f32)
+        s_eff = scale.reshape(1, -1).astype(jnp.float32) * float(1 << (8 - bits))
+    else:
+        cp = _pad_to(_pad_to(codes, _MIN_TILE, 0), _MIN_TILE, 1)
+        s_eff = scale.reshape(1, -1).astype(jnp.float32)
+    Np = cp.shape[1]
+    sp = _pad_to(s_eff, _MIN_TILE, 1)
     if bm is None or bn is None or bk is None:
-        abm, abn, abk = pick_blocks(Mp, Kp, Np, bits, interp)
+        abm, abn, abk = pick_blocks(Mp, Kp, Np, bits, interp, packed=packed)
         bm, bn, bk = bm or abm, bn or abn, bk or abk
-    args = [xp.astype(jnp.bfloat16), cp, sp]
+    args = [xp.astype(jnp.bfloat16)] * r + [cp, sp]
     if bias is not None:
         args.append(_pad_to(bias.reshape(1, -1).astype(jnp.float32),
                             _MIN_TILE, 1))
     call = build_call(Mp, Kp, Np, bits=bits, int8_act=False,
                       bm=min(bm, Mp), bn=min(bn, Np), bk=min(bk, Kp),
                       out_dtype=x.dtype, interpret=interp,
-                      has_bias=bias is not None, relu=relu, act_qt=act_qt)
+                      has_bias=bias is not None, relu=relu, act_qt=act_qt,
+                      packed=packed)
     y = call(*args)[:M, :N]
     return y.reshape(*lead, N)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
-def qmatmul_int8_act(x_codes, x_scale, codes, scale, *, bits: int = 8,
-                     interpret: Optional[bool] = None, out_dtype=jnp.bfloat16):
-    """Full-integer path: x_codes (M, K) int8 + per-row scale (M,)."""
-    M, K = x_codes.shape
-    N = codes.shape[1]
-    xp = _pad_to(_pad_to(x_codes, _MIN_TILE, 0), _MIN_TILE, 1)
-    xsp = _pad_to(x_scale.reshape(-1, 1).astype(jnp.float32), _MIN_TILE, 0)
-    cp = _pad_to(_pad_to(codes, _MIN_TILE, 0), _MIN_TILE, 1)
-    sp = _pad_to(scale.reshape(1, -1).astype(jnp.float32), _MIN_TILE, 1)
-    call = build_call(xp.shape[0], xp.shape[1], cp.shape[1], bits=bits,
-                      int8_act=True, out_dtype=out_dtype,
-                      interpret=resolve_interpret(interpret))
-    return call(xp, xsp, cp, sp)[:M, :N]
+@functools.partial(jax.jit, static_argnames=("bits", "relu", "act_qt",
+                                             "out_code", "packed", "interpret",
+                                             "use_kernel", "out_dtype",
+                                             "bm", "bn", "bk"))
+def qmatmul_int8_act(x_codes, x_scale, codes, scale, bias=None, *,
+                     bits: int = 8, relu: bool = False,
+                     act_qt: Optional[ActQt] = None, out_code: bool = False,
+                     packed: bool = False, interpret: Optional[bool] = None,
+                     use_kernel: Optional[bool] = None,
+                     out_dtype=jnp.bfloat16,
+                     bm: Optional[int] = None, bn: Optional[int] = None,
+                     bk: Optional[int] = None):
+    """Fully-integer Gemm: x_codes (..., K) int8 activation codes, MACs in
+    int32, the fused epilogue re-quantizing straight to the consumer's code.
+
+    ``x_scale`` is the producer FIFO's activation scale — a scalar (the hot
+    path: a power of two from calibration, folded into the per-channel weight
+    scale with zero extra work) or per-row ``(M,)`` (the legacy dynamic-range
+    path, applied in the epilogue).  ``codes`` is (K, N) int8 or the
+    split-row packed (K'/r, N) uint8 buffer with ``packed=True``;
+    ``out_code=True`` returns int8 codes (``act_qt`` required), else the
+    dequantized float in ``out_dtype``."""
+    lead = x_codes.shape[:-1]
+    K = x_codes.shape[-1]
+    N = codes.shape[-1]
+    r = (8 // bits) if packed else 1
+    if not packed:
+        assert codes.shape[0] == K, (
+            f"weight rows {codes.shape[0]} != reduction dim {K}")
+    x2 = x_codes.reshape(-1, K)
+    M = x2.shape[0]
+    xs = jnp.asarray(x_scale, jnp.float32)
+    per_row = xs.ndim >= 1 and xs.size > 1
+    interp = resolve_interpret(interpret)
+    if use_kernel is None:
+        use_kernel = not interp
+    if not use_kernel or min(M, K, N) < 8:
+        c = unpack_rows(codes, bits)[:K] if packed else codes
+        y = qmatmul_int8_act_ref(x2, xs, c, scale, bits, bias=bias, relu=relu,
+                                 act_qt=act_qt, out_code=out_code,
+                                 out_dtype=out_dtype)
+        return y.reshape(*lead, N)
+    xp = _pad_to(_pad_to(x2, _MIN_TILE, 0), _MIN_TILE, 1)
+    Mp, Kp = xp.shape
+    if packed:
+        assert codes.shape[0] * r == Kp, (
+            f"packed weight rows {codes.shape[0]} (x{r}) do not cover the "
+            f"padded reduction dim {Kp}")
+        cp = _pad_to(codes, _MIN_TILE, 1)
+        s_eff = scale.reshape(1, -1).astype(jnp.float32) * float(1 << (8 - bits))
+    else:
+        cp = _pad_to(_pad_to(codes, _MIN_TILE, 0), _MIN_TILE, 1)
+        s_eff = scale.reshape(1, -1).astype(jnp.float32)
+    Np = cp.shape[1]
+    if not per_row:
+        # scalar activation scale: fold into the channel scale (bit-exact
+        # with the oracle's fold — both scales are powers of two)
+        s_eff = s_eff * xs.reshape(())
+    sp = _pad_to(s_eff, _MIN_TILE, 1)
+    if bm is None or bn is None or bk is None:
+        abm, abn, abk = pick_blocks(Mp, Kp, Np, bits, interp, int8_act=True,
+                                    packed=packed)
+        bm, bn, bk = bm or abm, bn or abn, bk or abk
+    args = [xp] * r
+    if per_row:
+        args.append(_pad_to(xs.reshape(-1, 1), _MIN_TILE, 0))
+    args += [cp, sp]
+    if bias is not None:
+        args.append(_pad_to(bias.reshape(1, -1).astype(jnp.float32),
+                            _MIN_TILE, 1))
+    call = build_call(Mp, Kp, Np, bits=bits, int8_act=True,
+                      bm=min(bm, Mp), bn=min(bn, Np), bk=min(bk, Kp),
+                      out_dtype=out_dtype, interpret=interp,
+                      has_bias=bias is not None, relu=relu, act_qt=act_qt,
+                      packed=packed, emit_code=out_code, has_xscale=per_row)
+    y = call(*args)[:M, :N]
+    return y.reshape(*lead, N)

@@ -11,18 +11,45 @@ from repro.quant.ptq import derive_view
 ActQt = Tuple[int, int, int]
 
 
+def epilogue_code_ref(y, relu: bool, act_qt: ActQt):
+    """ReLU + fixed-point quantization, returning the *integer code* (still
+    f32 domain: ``clip(round(y * 2^frac))``) — what the fully-integer path
+    stores to the output FIFO as int8.  Round-half-even + saturate, identical
+    to ``fixedpoint.quantize``."""
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    frac, qmin, qmax = act_qt
+    return jnp.clip(jnp.round(y * (2.0 ** frac)), qmin, qmax)
+
+
 def epilogue_ref(y, relu: bool = False, act_qt: Optional[ActQt] = None):
     """ReLU + fixed-point activation fake-quant, bit-identical to
     ``fixedpoint.fake_quant`` (round-half-even, saturate; powers of two are
     exact in f32).  The Pallas kernels trace this same function in-VMEM, so
     the kernel/oracle bit-exactness contract has one home."""
-    if relu:
-        y = jnp.maximum(y, 0.0)
-    if act_qt is not None:
-        frac, qmin, qmax = act_qt
-        code = jnp.clip(jnp.round(y * (2.0 ** frac)), qmin, qmax)
-        y = code * (2.0 ** -frac)
-    return y
+    if act_qt is None:
+        return jnp.maximum(y, 0.0) if relu else y
+    frac = act_qt[0]
+    return epilogue_code_ref(y, relu, act_qt) * (2.0 ** -frac)
+
+
+def exact_in_f32(k_dim: int) -> bool:
+    """True when an integer dot over ``k_dim`` int8 codes is exact in f32
+    arithmetic: every product and partial sum stays below 2^24 (the f32
+    mantissa), so an f32 matmul — much faster than int32 on CPU backends —
+    returns bit-identical results to the int32 MXU path.  Activation codes
+    reach -128 (a signed 8-bit grid) while weight codes are clipped to
+    [-127, 127], so the per-step product bound is 128*127."""
+    return k_dim * 128 * 127 <= 2 ** 24
+
+
+def int_dot(x_codes, w_codes):
+    """Exact integer matmul of code matrices: f32 when provably exact (the
+    fast path XLA vectorizes everywhere), int32 otherwise.  Returns f32."""
+    if exact_in_f32(x_codes.shape[-1]):
+        return jnp.dot(x_codes.astype(jnp.float32), w_codes.astype(jnp.float32))
+    return jnp.dot(x_codes.astype(jnp.int32),
+                   w_codes.astype(jnp.int32)).astype(jnp.float32)
 
 
 def qmatmul_ref(x, codes, scale, bits: int = 8, out_dtype=jnp.bfloat16):
@@ -51,11 +78,30 @@ def qgemm_ref(x, codes, scale, bias=None, *, bits: int = 8,
 
 
 def qmatmul_int8_act_ref(x_codes, x_scale, codes, scale, bits: int = 8,
-                         out_dtype=jnp.bfloat16):
-    """Integer-domain path: x_codes (M, K) int8, per-row scale (M,) or scalar.
+                         bias=None, relu: bool = False,
+                         act_qt: Optional[ActQt] = None,
+                         out_code: bool = False, out_dtype=jnp.bfloat16):
+    """Fully-integer path oracle: x_codes (M, K) int8, x_scale a scalar or
+    per-row (M,) f32, with the fused epilogue.
 
-    Accumulates in int32 (the MXU int8 path) then rescales."""
+    Accumulates exactly in the integer domain (:func:`int_dot`) then
+    rescales.  A *scalar* ``x_scale`` (the writer hot path: a power-of-two
+    activation-code scale) is folded into the per-channel weight scale before
+    the accumulator multiply — the same order the Pallas kernel uses, so the
+    two are bit-identical (power-of-two products are exact in f32).
+    ``out_code=True`` returns the int8 *code* of the quantized output
+    (``act_qt`` required) instead of its float value — codes, not floats,
+    flow to the consumer."""
     w = derive_view(codes, bits)
-    acc = jnp.dot(x_codes.astype(jnp.int32), w.astype(jnp.int32))
-    y = acc.astype(jnp.float32) * x_scale.reshape(-1, 1) * scale.reshape(1, -1)
-    return y.astype(out_dtype)
+    acc = int_dot(x_codes, w)
+    xs = jnp.asarray(x_scale, jnp.float32)
+    if xs.ndim == 0 or xs.size == 1:
+        y = acc * (xs.reshape(()) * scale.reshape(1, -1))
+    else:
+        y = acc * xs.reshape(-1, 1) * scale.reshape(1, -1)
+    if bias is not None:
+        y = y + bias.reshape(1, -1).astype(jnp.float32)
+    if out_code:
+        assert act_qt is not None, "out_code needs the output act_qt"
+        return epilogue_code_ref(y, relu, act_qt).astype(jnp.int8)
+    return epilogue_ref(y, relu, act_qt).astype(out_dtype)

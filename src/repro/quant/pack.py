@@ -1,6 +1,6 @@
 """Packed weight storage: the one-copy-many-points artifact.
 
-Two layers live here:
+Three layers live here:
 
 * :class:`PackedWeights` / :class:`PackedTensor` — every >=2-D initializer of
   a graph quantized ONCE to int8 master codes + per-output-channel f32 scales.
@@ -9,17 +9,90 @@ Two layers live here:
   paper's MDC weight sharing, and what lets ``AccelServer`` switch precision
   per batch with zero weight movement.  The dequant-fused
   ``repro.kernels.qmatmul`` kernels stream these codes directly.
-* bit-packing helpers for sub-byte storage (int4: 2/byte, int2: 4/byte) —
-  what turns low weight precision into a real HBM-bandwidth win on TPU (the
-  paper's BRAM-column effect); the kernels unpack in-VMEM.
+* sub-byte **HBM residency**: ``PackedTensor.packed_view(bits)`` stores the
+  W4/W2 views nibble/crumb-packed into ``uint8`` with the *split-row* layout
+  (:func:`pack_rows`), cutting the resident weight buffer to ~1/2 and ~1/4 of
+  the W8 codes — the paper's BRAM-column effect realized as real HBM
+  bandwidth: the qmatmul kernels unpack each k-block in-VMEM.
+* generic bit-packing helpers (int4: 2/byte, int2: 4/byte) along the last
+  dim (``pack_int4`` / ``pack_int2``) — layout-agnostic round-trip utilities.
+
+Split-row layout
+----------------
+``pack_rows(codes, bits)`` pads K (the reduction dim) up to ``PACK_ALIGN``,
+splits the rows into ``r = 8 // bits`` contiguous chunks of ``Kp / r`` rows,
+and packs row ``i`` of every chunk into one byte (chunk ``j`` occupies bit
+field ``j*bits``).  A contiguous *byte-row* block of the packed buffer then
+maps to ``r`` contiguous *code-row* blocks of the logical matrix — exactly
+what a Pallas kernel wants: it streams one packed (bk/r, bn) tile plus the
+``r`` matching activation tiles and never reshuffles lanes in VMEM.  The
+stored field is ``q = view / 2^(8-bits)`` (the true ``bits``-bit integer), so
+kernels fold the power-of-two step into the channel scale instead of
+multiplying it back per element.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict
 
 import jax
 import jax.numpy as jnp
+
+# K-dim alignment of the packed buffers: matches the qmatmul kernels'
+# _MIN_TILE so a stored packed view is directly streamable (no repack)
+PACK_ALIGN = 128
+
+# working points with a sub-byte packed representation
+SUB_BYTE_BITS = (4, 2)
+
+
+def _pad_rows(codes, align: int):
+    r = (-codes.shape[0]) % align
+    if r == 0:
+        return codes
+    return jnp.pad(codes, ((0, r),) + ((0, 0),) * (codes.ndim - 1))
+
+
+def pack_rows(codes, bits: int, align: int = PACK_ALIGN):
+    """int8 master codes (K, N) -> split-row packed uint8 (Kp/r, N).
+
+    ``r = 8 // bits``; K is zero-padded to ``align`` (code 0 packs to a zero
+    field and contributes nothing to a MAC).  Byte ``i`` holds the ``bits``-bit
+    integer ``q`` of rows ``i + j*(Kp/r)`` for ``j = 0..r-1``, field ``j`` at
+    bit ``j*bits``.  ``q`` is the rounded nested truncation — identical to
+    ``derive_view(codes, bits) / 2^(8-bits)``."""
+    assert bits in SUB_BYTE_BITS, f"no sub-byte packing for bits={bits}"
+    r = 8 // bits
+    shift = 8 - bits
+    step = 1 << shift
+    half = 1 << (bits - 1)
+    cp = _pad_rows(jnp.asarray(codes), align)
+    kp = cp.shape[0]
+    q = jnp.clip(jnp.round(cp.astype(jnp.float32) / step),
+                 -half, half - 1).astype(jnp.int32)
+    chunks = q.reshape(r, kp // r, *cp.shape[1:])
+    mask = (1 << bits) - 1
+    out = jnp.zeros(chunks.shape[1:], jnp.int32)
+    for j in range(r):
+        out = out | ((chunks[j] & mask) << (j * bits))
+    return out.astype(jnp.uint8)
+
+
+def unpack_rows(packed, bits: int):
+    """Split-row packed uint8 (Kp/r, N) -> int8 codes (Kp, N) in the *view*
+    domain (``q * 2^(8-bits)``, i.e. exactly ``derive_view`` of the master)."""
+    assert bits in SUB_BYTE_BITS, f"no sub-byte packing for bits={bits}"
+    r = 8 // bits
+    step = 1 << (8 - bits)
+    half = 1 << (bits - 1)
+    mask = (1 << bits) - 1
+    p = packed.astype(jnp.int32)
+    chunks = []
+    for j in range(r):
+        f = (p >> (j * bits)) & mask
+        q = jnp.where(f >= half, f - (1 << bits), f)
+        chunks.append(q * step)
+    return jnp.concatenate(chunks, axis=0).astype(jnp.int8)
 
 
 # ---------------------------------------------------------------------------
@@ -33,10 +106,14 @@ class PackedTensor:
     ``codes`` keeps the original weight shape (HWIO for conv, (K, N) for
     Gemm); ``scale`` is f32 and broadcastable against it (keepdims over the
     last axis).  Low-bit working points are derived views of the same codes —
-    no storage per point."""
+    no storage per point; the W4/W2 views additionally cache a *sub-byte
+    packed* buffer (:meth:`packed_view`) so their HBM residency really is
+    bits/8 of the master's."""
 
     codes: jax.Array     # int8, original weight shape
     scale: jax.Array     # f32, per-output-channel (last dim), keepdims
+    _packed: Dict[int, jax.Array] = field(default_factory=dict, repr=False,
+                                          compare=False)
 
     def view(self, bits: int) -> jax.Array:
         """The ``bits``-bit nested-truncation view of the master codes."""
@@ -56,10 +133,32 @@ class PackedTensor:
     def scale_1d(self) -> jax.Array:
         return self.scale.reshape(-1)
 
+    def packed_view(self, bits: int) -> jax.Array:
+        """Split-row sub-byte packed W4/W2 buffer (cached; K padded to
+        :data:`PACK_ALIGN` so kernels stream it without a repack)."""
+        if bits not in SUB_BYTE_BITS:
+            raise ValueError(f"packed_view is for bits in {SUB_BYTE_BITS}, "
+                             f"got {bits} (the W8 view IS the master codes)")
+        if bits not in self._packed:
+            self._packed[bits] = pack_rows(self.codes_2d(), bits)
+        return self._packed[bits]
+
     @property
     def nbytes(self) -> int:
         """Master storage: 1 byte/code + 4 bytes/scale (shared by all points)."""
         return int(self.codes.size) + 4 * int(self.scale.size)
+
+    def view_nbytes(self, bits: int) -> int:
+        """Resident HBM bytes of the ``bits``-bit view on the kernel path:
+        the streamed weight buffer (K padded to :data:`PACK_ALIGN`, sub-byte
+        packed below W8) plus the f32 channel scales."""
+        k, n = self.codes_2d().shape
+        kp = k + ((-k) % PACK_ALIGN)
+        if bits in SUB_BYTE_BITS:
+            buf = (kp // (8 // bits)) * n
+        else:
+            buf = kp * n
+        return buf + 4 * int(self.scale.size)
 
 
 @dataclass
@@ -69,7 +168,8 @@ class PackedWeights:
     ``tensors`` holds the packed >=2-D weights; ``passthrough`` everything that
     stays float (biases, norm stats, 1-D tensors).  One instance backs every
     working-point executable of a :class:`~repro.core.writers.qjax_writer.
-    QJaxWriter` — switching W8 -> W4 -> W2 re-reads the same buffers."""
+    QJaxWriter` — switching W8 -> W4 -> W2 re-reads the same buffers (W8: the
+    int8 master; W4/W2: its cached sub-byte packed views)."""
 
     tensors: Dict[str, PackedTensor]
     passthrough: Dict[str, jax.Array]
@@ -98,12 +198,19 @@ class PackedWeights:
         """Bytes of the shared master buffer (codes + scales)."""
         return sum(t.nbytes for t in self.tensors.values())
 
-    def sharing_report(self, n_points: int) -> Dict[str, float]:
+    def view_bytes(self, bits: int) -> int:
+        """Resident streamed weight bytes at a working point (sub-byte packed
+        buffers below W8; see :meth:`PackedTensor.view_nbytes`)."""
+        return sum(t.view_nbytes(bits) for t in self.tensors.values())
+
+    def sharing_report(self, n_points: int = 3) -> Dict[str, float]:
         """Merged-vs-separate weight storage for ``n_points`` working points
         (the MDC LUT-sharing story, in bytes): the shared master vs each point
         holding its own int8 copy (a 1/n_points drop by construction), and —
         the empirical ``sharing_ratio`` — vs the legacy per-point fake-quant
-        f32 copies the writers used to bake into each executable."""
+        f32 copies the writers used to bake into each executable.  The
+        ``view_bytes`` entry accounts the *streamed* buffer per point with
+        sub-byte packing (what actually moves HBM -> VMEM at W4/W2)."""
         shared = self.code_bytes()
         n_elems = sum(int(t.codes.size) for t in self.tensors.values())
         f32_copies = n_points * 4 * n_elems
@@ -113,6 +220,7 @@ class PackedWeights:
             "per_point_copy_bytes": n_points * shared,
             "per_point_f32_bytes": f32_copies,
             "sharing_ratio": f32_copies / max(shared, 1),
+            "view_bytes": {b: self.view_bytes(b) for b in (8, *SUB_BYTE_BITS)},
         }
 
 

@@ -110,6 +110,23 @@ def calibrate_acts(capture_fn: Callable[[], Dict[str, jax.Array]]) -> Dict[str, 
     return {k: float(jnp.max(jnp.abs(v))) for k, v in acts.items()}
 
 
+def act_code_qtype(bits: int, act_range: float) -> QType:
+    """The integer-code qtype of one activation FIFO: a power-of-two scale
+    (``2^-frac``) sized so the calibrated range fits ``min(bits, 8)`` signed
+    integers.  This is what the fully-integer hot path threads between
+    layers — the producer's kernel epilogue emits these int8 codes and the
+    consumer folds ``2^-frac`` into its weight scales (one f32 multiply per
+    output channel, zero per-element dequant work)."""
+    return fixed_for_range(min(bits, 8), act_range)
+
+
+def act_code_scales(act_ranges: Dict[str, float], bits: int = 8
+                    ) -> Dict[str, QType]:
+    """Per-FIFO activation-code qtypes from calibrated ranges (the artifact
+    ``DesignFlow.calibrate`` feeds to the ``qjax`` writer)."""
+    return {name: act_code_qtype(bits, r) for name, r in act_ranges.items()}
+
+
 # ---------------------------------------------------------------------------
 # MXU-native weight-only path (LM serving)
 # ---------------------------------------------------------------------------

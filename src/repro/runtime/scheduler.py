@@ -68,13 +68,18 @@ def percentile(samples: Sequence[float], q: float) -> float:
 
 @dataclass
 class Request:
-    """One inference request: a tuple of arrays sharing the leading dim."""
+    """One inference request: a tuple of arrays sharing the leading dim.
+
+    A submission larger than ``max_batch`` is *split*: the queue holds its
+    chunk requests and the caller gets back a parent whose ``children`` lists
+    the chunk rids in order — the executor demuxes them back to one ticket."""
 
     rid: int
     inputs: Tuple[Any, ...]
     size: int
     arrival: float
     budget: float = 1.0
+    children: Optional[List[int]] = None
 
 
 @dataclass
@@ -192,7 +197,10 @@ class CoalescingScheduler:
     Requests are packed strictly in arrival order (no reordering, so no
     starvation): a batch closes when adding the next request would overflow
     ``max_batch``, when it reaches ``max_batch`` exactly, when the oldest
-    member has waited ``max_wait`` seconds, or on an explicit flush.  The
+    member has waited ``max_wait`` seconds, or on an explicit flush.  A
+    submission *larger* than ``max_batch`` is split into back-to-back chunk
+    requests and returned as a parent carrying their rids (``children``) —
+    the executor concatenates the chunk outputs back into one result.  The
     clock is injected (``clock=FakeClock()`` in tests) and only ever read —
     the scheduler never sleeps; the serving loop decides when to poll.
     """
@@ -225,6 +233,8 @@ class CoalescingScheduler:
         self._sig_source = "served artifact's" if signature else None
         # telemetry
         self.submitted = 0
+        self.split_requests = 0
+        self.split_chunks = 0
         self.scheduled = 0
         self.scheduled_rows = 0
         self.padded_rows = 0
@@ -247,11 +257,6 @@ class CoalescingScheduler:
         size = sizes.pop()
         if size < 1:
             raise ValueError("request leading dim must be >= 1")
-        if size > self.max_batch:
-            raise ValueError(
-                f"request size {size} exceeds max_batch {self.max_batch}; "
-                "split it before submitting"
-            )
         sig = request_signature(inputs)
         if self._sig is None:
             self._sig = sig
@@ -264,14 +269,32 @@ class CoalescingScheduler:
                 f"request signature {sig} does not match the "
                 f"{self._sig_source} {self._sig}"
             )
-        if len(self._queue) >= self.queue_depth:
+        n_chunks = -(-size // self.max_batch)
+        if len(self._queue) + n_chunks > self.queue_depth:
             raise QueueFull(
                 f"queue_depth {self.queue_depth} reached; retry after a pump"
             )
-        req = Request(next(self._rids), inputs, size, self.clock(), budget)
-        self._queue.append(req)
+        if size <= self.max_batch:
+            req = Request(next(self._rids), inputs, size, self.clock(), budget)
+            self._queue.append(req)
+            self.submitted += 1
+            return req
+        # oversize request: split into max_batch-sized chunk requests (queued
+        # back to back, so FIFO packing keeps them contiguous) and hand back
+        # a parent the executor demuxes to one ticket
+        arrival = self.clock()
+        parent = Request(next(self._rids), inputs, size, arrival, budget, children=[])
+        for off in range(0, size, self.max_batch):
+            chunk = tuple(x[off : off + self.max_batch] for x in inputs)
+            child = Request(
+                next(self._rids), chunk, int(chunk[0].shape[0]), arrival, budget
+            )
+            self._queue.append(child)
+            parent.children.append(child.rid)
         self.submitted += 1
-        return req
+        self.split_requests += 1
+        self.split_chunks += n_chunks
+        return parent
 
     def _packable(self) -> Tuple[int, int]:
         """(#requests, total rows) the head of the queue packs into."""
@@ -326,6 +349,8 @@ class CoalescingScheduler:
         rows = self.scheduled_rows + self.padded_rows
         return {
             "submitted": self.submitted,
+            "split_requests": self.split_requests,
+            "split_chunks": self.split_chunks,
             "scheduled_batches": self.scheduled,
             "scheduled_rows": self.scheduled_rows,
             "padded_rows": self.padded_rows,

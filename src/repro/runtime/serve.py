@@ -231,6 +231,9 @@ class AccelServer:
         self.clock = clock
         self._results: Dict[int, Any] = {}
         self._dropped: set = set()
+        # oversize submissions: parent ticket -> ordered chunk tickets (the
+        # scheduler split them; result() concatenates the chunk outputs)
+        self._split: Dict[int, List[int]] = {}
         # bounded telemetry windows: a long-running server keeps the last
         # ``history`` entries, not one record per request forever (the
         # scheduler's totals stay cumulative)
@@ -240,8 +243,14 @@ class AccelServer:
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, *inputs, budget: float = 1.0) -> int:
-        """Enqueue one request; returns the ticket for :meth:`result`."""
-        return self.scheduler.submit(inputs, budget=budget).rid
+        """Enqueue one request; returns the ticket for :meth:`result`.
+
+        A request whose leading dim exceeds ``max_batch`` is transparently
+        split into chunk requests and demuxed back to this one ticket."""
+        req = self.scheduler.submit(inputs, budget=budget)
+        if req.children:
+            self._split[req.rid] = list(req.children)
+        return req.rid
 
     def _executables(self) -> List[Callable]:
         uniq, seen = [], set()
@@ -329,6 +338,25 @@ class AccelServer:
         Results are single-consumption: each ticket must be claimed exactly
         once (or released with :meth:`drop`), else its output stays resident.
         """
+        children = self._split.pop(ticket, None)
+        if children is not None:
+            parts = []
+            try:
+                for c in children:
+                    parts.append(self.result(c))
+            except Exception:
+                # a chunk claim failed: release every unclaimed chunk so no
+                # output stays resident forever.  The raising chunk is
+                # included — its pump may have re-raised a DIFFERENT batch's
+                # failure while this chunk was still queued, in which case it
+                # was never consumed; if it WAS consumed the drop leaves at
+                # most a stale rid in _dropped (never an array).
+                for c in children[len(parts):]:
+                    self.drop(c)
+                raise
+            if parts and isinstance(parts[0], tuple):
+                return tuple(np.concatenate(col) for col in zip(*parts))
+            return np.concatenate(parts)
         if ticket not in self._results:
             try:
                 self.pump(flush=True)
@@ -348,7 +376,12 @@ class AccelServer:
         """Release an abandoned ticket (client gave up / timed out) so its
         result does not stay resident forever — whether it already executed
         or is still queued (the batch still runs; the output is discarded
-        at demux)."""
+        at demux).  Dropping a split parent releases every chunk."""
+        children = self._split.pop(ticket, None)
+        if children is not None:
+            for c in children:
+                self.drop(c)
+            return
         if self._results.pop(ticket, None) is None:
             self._dropped.add(ticket)
 
@@ -381,4 +414,12 @@ class AccelServer:
         # latency to weight working points (W8/W4/W2) over the same window
         s["bits_views"] = dict(Counter(r.bits for r in self.reports
                                        if r.bits is not None))
+        # per-bits resident weight bytes: packed-weight executables stream
+        # sub-byte packed buffers at W4/W2, so the bytes actually moving
+        # HBM -> VMEM per view are what this reports (not bucket counts)
+        s["bits_bytes"] = {
+            exe.bits: exe.packed.view_bytes(exe.bits)
+            for exe in self._executables()
+            if getattr(exe, "packed", None) is not None
+            and getattr(exe, "bits", None) is not None}
         return s

@@ -11,8 +11,8 @@ from repro.core.flow import DesignFlow
 from repro.core.ir import Graph, Node, TensorInfo
 from repro.core.passes import (PassManager, default_pipeline,
                                eliminate_dead_nodes, fold_constants,
-                               fuse_conv_bn_relu, infer_shapes,
-                               make_assign_precision)
+                               fuse_conv_bn_relu, fuse_gemm_relu,
+                               infer_shapes, make_assign_precision)
 from repro.core.reader import cnn_to_ir, mlp_to_ir
 from repro.core.writers.jax_writer import JaxWriter
 from repro.models import cnn
@@ -82,6 +82,52 @@ def test_fusion_direct_conv_bn_relu_chain():
     assert set(fused.initializers) == {"w", "b"}  # BN stats swept by DCE
     np.testing.assert_allclose(np.asarray(JaxWriter(fused).build()(x)),
                                np.asarray(ref), atol=1e-5)
+
+
+def test_gemm_relu_fusion_matches_unfused(mlp_graph):
+    """Gemm -> Relu folds into FusedGemm with identical numerics; the final
+    Gemm (graph output, no Relu) stays untouched."""
+    g, x = mlp_graph
+    ref = JaxWriter(g).build()(x)
+    fused = fuse_gemm_relu(g)
+    ops = [n.op for n in fused.topo_order()]
+    assert ops == ["FusedGemm", "Gemm"]
+    fg = fused.topo_order()[0]
+    assert fg.attrs["relu"] is True and fg.attrs["fused_from"] == ["relu0"]
+    out = JaxWriter(fused).build()(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_gemm_relu_fusion_in_default_pipeline(mlp_graph):
+    g, x = mlp_graph
+    res = DesignFlow(g).run(targets=("jax", "stream"))
+    ops = [n.op for n in res.graph.topo_order()]
+    assert "FusedGemm" in ops and "Relu" not in ops
+    raw = DesignFlow(g).run(targets=("jax",), passes=())
+    np.testing.assert_allclose(np.asarray(res.executables["jax"](x)),
+                               np.asarray(raw.executables["jax"](x)),
+                               atol=1e-6)
+    # the stream topology sizes FusedGemm FIFOs with the matrix model
+    # (whole per-item vector resident) just like Gemm
+    topo = res.writers["stream"].topology()
+    fg_conns = [c for c in topo["connections"]
+                if c["dst"] == "fc0" and c["src"] == "input"]
+    assert fg_conns and fg_conns[0]["depth"] == 12
+
+
+def test_gemm_relu_fusion_skips_fanout_and_outputs():
+    """A Gemm whose output feeds two consumers (or the graph output) must not
+    fuse — the intermediate FIFO is observable."""
+    rng = np.random.default_rng(2)
+    inits = {"w/a": rng.normal(size=(4, 4)).astype(np.float32)}
+    nodes = [
+        Node("Gemm", "g0", ["x", "w/a"], ["h"]),
+        Node("Relu", "r0", ["h"], ["r"]),
+        Node("Add", "a0", ["h", "r"], ["y"]),     # second consumer of h
+    ]
+    g = Graph("fanout", nodes, [TensorInfo("x", (2, 4))], ["y"], inits)
+    fused = fuse_gemm_relu(g)
+    assert [n.op for n in fused.topo_order()] == ["Gemm", "Relu", "Add"]
 
 
 def test_fusion_negative_bn_scale_across_pool_falls_back():

@@ -10,7 +10,8 @@ from hypothesis import given, settings, strategies as st
 from repro.data.tokens import DataConfig, batch_at
 from repro.models.common import cross_entropy
 from repro.quant.fixedpoint import dequantize, quantize
-from repro.quant.pack import pack_int2, pack_int4, unpack_int2, unpack_int4
+from repro.quant.pack import (pack_int2, pack_int4, pack_rows, unpack_int2,
+                              unpack_int4, unpack_rows)
 from repro.quant.ptq import derive_view
 from repro.quant.qtypes import fixed_for_range
 
@@ -33,6 +34,22 @@ def test_pack2_roundtrip(codes):
     c = jnp.array(codes, jnp.int8).reshape(1, -1)
     np.testing.assert_array_equal(np.asarray(unpack_int2(pack_int2(c))),
                                   np.asarray(c))
+
+
+@given(st.integers(1, 300), st.integers(1, 8), st.sampled_from([4, 2]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_pack_rows_roundtrip_property(k, n, bits, seed):
+    """Split-row sub-byte packing: for ANY int8 code matrix,
+    ``unpack(pack(c))`` equals the nested ``bits``-bit view on the original
+    rows and is exactly zero on the alignment-padding rows."""
+    rng = np.random.default_rng(seed)
+    c = rng.integers(-127, 128, (k, n)).astype(np.int8)
+    up = np.asarray(unpack_rows(pack_rows(c, bits), bits))
+    assert up.shape[0] % 128 == 0 and up.shape[0] >= k
+    np.testing.assert_array_equal(up[:k],
+                                  np.asarray(derive_view(jnp.asarray(c), bits)))
+    assert not up[k:].any()
 
 
 @given(st.floats(0.01, 100.0), st.sampled_from([4, 8, 16]))

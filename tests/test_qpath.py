@@ -1,7 +1,8 @@
 """Packed-weight execution engine: bit-exactness of the packed-kernel path
 against the fake-quant reference, nested-view truncation, fused epilogue
 semantics, backend-aware interpret selection, shared weight buffers across
-working points, and the AccelServer bits telemetry."""
+working points, the fully-integer (int8 activation code) hot path, sub-byte
+packed weight residency, and the AccelServer bits telemetry."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,13 +14,16 @@ from repro.core.flow import DesignFlow
 from repro.core.ir import Graph
 from repro.core.reader import cnn_to_ir, mlp_to_ir
 from repro.core.writers.jax_writer import JaxWriter
-from repro.core.writers.qjax_writer import QJaxContext, QJaxWriter, im2col
+from repro.core.writers.qjax_writer import (ActCode, QJaxContext, QJaxWriter,
+                                            im2col)
 from repro.kernels.qmatmul import ops as qops
-from repro.kernels.qmatmul.ops import pick_blocks, qgemm, resolve_interpret
-from repro.kernels.qmatmul.ref import epilogue_ref, qgemm_ref
+from repro.kernels.qmatmul.ops import (pick_blocks, qgemm, qmatmul_int8_act,
+                                       resolve_interpret)
+from repro.kernels.qmatmul.ref import (epilogue_ref, qgemm_ref,
+                                       qmatmul_int8_act_ref)
 from repro.models import cnn
 from repro.quant.fixedpoint import fake_quant
-from repro.quant.pack import PackedWeights
+from repro.quant.pack import PackedWeights, pack_rows, unpack_rows
 from repro.quant.ptq import derive_view
 from repro.quant.qtypes import DatatypeConfig, QType
 
@@ -95,8 +99,8 @@ def test_pick_blocks_caches_and_divides():
     assert 256 % bm == 0 and 384 % bn == 0 and 512 % bk == 0
     # the interpret flag is part of the key: an interpret-mode default must
     # not pin the untuned blocks for later compiled calls of the same shape
-    assert (256, 512, 384, 8, True) in qops._BLOCK_CACHE
-    assert (256, 512, 384, 8, False) not in qops._BLOCK_CACHE
+    assert (256, 512, 384, 8, False, False, True) in qops._BLOCK_CACHE
+    assert (256, 512, 384, 8, False, False, False) not in qops._BLOCK_CACHE
     assert pick_blocks(256, 512, 384, 8, interpret=True) == (bm, bn, bk)
 
 
@@ -284,6 +288,243 @@ def test_serve_adaptive_switches_bits_with_zero_weight_copies():
     for point, bits in (("w8", 8), ("w4", 4), ("w2", 2)):
         np.testing.assert_allclose(
             outs[point], np.asarray(writer.build(bits=bits)(x)), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fully-integer hot path: int8 activation codes end-to-end
+# ---------------------------------------------------------------------------
+
+def _mk_int8_inputs(M, K, N, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((M, K)).astype(np.float32)
+    xs = 2.0 ** -4
+    xc = np.clip(np.round(x / xs), -128, 127).astype(np.int8)
+    w = rng.standard_normal((K, N)).astype(np.float32) * 0.3
+    s = (np.maximum(np.abs(w).max(0), 1e-8) / 127.0).astype(np.float32)
+    wc = np.clip(np.round(w / s), -127, 127).astype(np.int8)
+    b = (rng.standard_normal(N) * 0.1).astype(np.float32)
+    return jnp.asarray(xc), xs, jnp.asarray(wc), jnp.asarray(s), jnp.asarray(b)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 256, 128), (64, 200, 48),
+                                   (130, 130, 130)])
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_int8_act_kernel_bitexact_vs_ref(M, K, N, bits):
+    """The fully-integer kernel (forced interpret mode) must be BIT-exact vs
+    the oracle across shapes and working points: int32 accumulation plus
+    power-of-two scale folds leave no room for float drift."""
+    xc, xs, wc, s, b = _mk_int8_inputs(M, K, N, seed=bits)
+    aqt = (10, -128, 127)
+    for out_code in (False, True):
+        y_k = qmatmul_int8_act(xc, xs, wc, s, b, bits=bits, relu=True,
+                               act_qt=aqt, out_code=out_code,
+                               interpret=True, use_kernel=True,
+                               out_dtype=jnp.float32)
+        y_r = qmatmul_int8_act_ref(xc, xs, wc, s, bits, bias=b, relu=True,
+                                   act_qt=aqt, out_code=out_code,
+                                   out_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_r))
+        if out_code:
+            assert y_k.dtype == jnp.int8
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+def test_int8_act_kernel_packed_weights_bitexact(bits):
+    """Sub-byte packed weight streaming (in-VMEM unpack) is bit-exact vs the
+    unpacked oracle: the packed field is the true low-bit integer and its
+    2^(8-bits) step folds into the scale exactly."""
+    xc, xs, wc, s, b = _mk_int8_inputs(64, 200, 48, seed=bits + 10)
+    packed = pack_rows(wc, bits)
+    assert packed.dtype == jnp.uint8
+    y_k = qmatmul_int8_act(xc, xs, packed, s, b, bits=bits, relu=True,
+                           act_qt=(9, -128, 127), out_code=True, packed=True,
+                           interpret=True, use_kernel=True)
+    y_r = qmatmul_int8_act_ref(xc, xs, wc, s, bits, bias=b, relu=True,
+                               act_qt=(9, -128, 127), out_code=True)
+    np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_r))
+
+
+def test_int8_act_per_row_scale_legacy_path():
+    """The per-row dynamic-range form survives the rework (epilogue applies
+    the row scale before the channel scale, same order as the oracle)."""
+    xc, _, wc, s, _ = _mk_int8_inputs(128, 256, 128, seed=3)
+    xs = jnp.asarray(
+        np.random.default_rng(3).uniform(0.001, 0.1, 128).astype(np.float32))
+    y_k = qmatmul_int8_act(xc, xs, wc, s, bits=8, interpret=True,
+                           use_kernel=True)
+    y_r = qmatmul_int8_act_ref(xc, xs, wc, s, 8)
+    np.testing.assert_array_equal(np.asarray(y_k, np.float32),
+                                  np.asarray(y_r, np.float32))
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+def test_pack_rows_roundtrip_and_padding(bits):
+    """Round trip: unpack(pack(codes)) == derive_view(codes) with zero-padded
+    tail rows (zero fields are the zero code — MAC-neutral)."""
+    rng = np.random.default_rng(bits)
+    codes = rng.integers(-127, 128, (200, 40)).astype(np.int8)
+    up = np.asarray(unpack_rows(pack_rows(codes, bits), bits))
+    assert up.shape == (256, 40)     # K padded to PACK_ALIGN
+    np.testing.assert_array_equal(
+        up[:200], np.asarray(derive_view(jnp.asarray(codes), bits)))
+    assert (up[200:] == 0).all()
+
+
+def test_packed_view_byte_accounting():
+    """Sub-byte residency: the W4 buffer is <= 0.55x and W2 <= 0.30x of the
+    W8 view, per tensor and graph-wide (scales included)."""
+    packed = PackedWeights.from_initializers(_cnn_graph().initializers)
+    for t in packed.tensors.values():
+        w8 = t.view_nbytes(8)
+        assert t.view_nbytes(4) <= 0.55 * w8
+        assert t.view_nbytes(2) <= 0.30 * w8
+        # the packed buffer itself really is the advertised uint8 size
+        for bits in (4, 2):
+            pv = t.packed_view(bits)
+            assert pv.dtype == jnp.uint8
+            assert int(pv.size) + 4 * int(t.scale.size) == t.view_nbytes(bits)
+    rep = packed.sharing_report(3)
+    vb = rep["view_bytes"]
+    assert vb[4] <= 0.55 * vb[8] and vb[2] <= 0.30 * vb[8]
+
+
+def test_packed_view_is_cached_one_buffer():
+    packed = PackedWeights.from_initializers(_cnn_graph().initializers)
+    t = next(iter(packed.tensors.values()))
+    assert t.packed_view(4) is t.packed_view(4)   # one resident buffer
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_int8_act_codes_flow_between_layers(use_kernel):
+    """The acceptance property: with D8 activations every inter-layer tensor
+    on the hot path is an int8 ActCode — floats materialize ONLY at graph
+    outputs (and at ops with no integer impl, of which the CNN has none)."""
+    g = _cnn_graph()
+    rng = np.random.default_rng(0)
+    flow = DesignFlow(g)
+    res = flow.run(targets=("qjax",), dtconfig=DatatypeConfig(8, 8),
+                   calib_inputs=(rng.random((2, 28, 28, 1), np.float32),),
+                   writer_kwargs={"qjax": {"use_kernel": use_kernel,
+                                           "interpret": True}})
+    w = res.writers["qjax"]
+    assert w.int8_act_on
+    x = rng.random((2, 28, 28, 1), np.float32)
+    out, env = w.build(capture=True)(x)
+    outputs = set(w.graph.outputs)
+    for node in w.graph.topo_order():
+        for o in node.outputs:
+            if o in outputs:
+                continue
+            assert isinstance(env[o], ActCode), \
+                f"{node.op} output {o} materialized {type(env[o]).__name__}"
+            assert env[o].codes.dtype == jnp.int8
+    # the graph INPUT is also encoded once at the boundary
+    assert isinstance(env["input"], ActCode)
+    # and the caller-facing output is float
+    assert jnp.issubdtype(out.dtype, jnp.floating)
+
+
+def test_int8_act_e2e_within_quantized_tolerance():
+    """End to end on CNN + MLP: the fully-integer executable agrees with the
+    float-calibrated fake-quant reference to quantization tolerance, and the
+    forced-kernel build is bit-exact with the integer ref build (both are
+    exact integer arithmetic)."""
+    rng = np.random.default_rng(1)
+    mlp_sizes = [64, 32, 16, 8]
+    mlp_params = {}
+    for i in range(len(mlp_sizes) - 1):
+        mlp_params[f"fc{i}/w"] = rng.standard_normal(
+            (mlp_sizes[i], mlp_sizes[i + 1])).astype(np.float32) * 0.3
+        mlp_params[f"fc{i}/b"] = rng.standard_normal(
+            mlp_sizes[i + 1]).astype(np.float32) * 0.1
+    cases = [
+        (_cnn_graph(), rng.random((3, 28, 28, 1), np.float32)),
+        (mlp_to_ir(mlp_sizes, mlp_params), rng.random((5, 64), np.float32)),
+    ]
+    for g, x in cases:
+        res = DesignFlow(g).run(targets=("jax", "qjax"),
+                                dtconfig=DatatypeConfig(8, 8),
+                                calib_inputs=(x[:2],))
+        y_ref = np.asarray(res.batched["jax"](x))          # f32 fake-quant
+        y_int = np.asarray(res.batched["qjax"](x))         # integer codes
+        scale = np.max(np.abs(y_ref)) + 1e-9
+        assert np.max(np.abs(y_ref - y_int)) / scale < 0.06
+        # top-1 may only flip where the reference's top-2 margin is inside
+        # the quantization tolerance (untrained logits have near-ties)
+        for row in np.where(np.argmax(y_ref, -1) != np.argmax(y_int, -1))[0]:
+            top2 = np.sort(y_ref[row])[-2:]
+            assert top2[1] - top2[0] < 0.12 * scale
+        # forced interpret-mode kernels == integer ref path, bit for bit
+        wk = QJaxWriter(res.graph, DatatypeConfig(8, 8), res.act_ranges,
+                        use_kernel=True, interpret=True)
+        wr = QJaxWriter(res.graph, DatatypeConfig(8, 8), res.act_ranges,
+                        use_kernel=False)
+        for bits in (8, 4, 2):
+            np.testing.assert_array_equal(
+                np.asarray(wk.build(bits=bits)(x)),
+                np.asarray(wr.build(bits=bits)(x)))
+
+
+def test_int8_act_disabled_above_8_bit_activations():
+    g = _cnn_graph()
+    assert not QJaxWriter(g, DatatypeConfig(16, 8)).int8_act_on
+    assert not QJaxWriter(g).int8_act_on              # float default
+    assert QJaxWriter(g, DatatypeConfig(8, 8)).int8_act_on
+    assert not QJaxWriter(g, DatatypeConfig(8, 8), int8_act=False).int8_act_on
+    assert QJaxWriter(g, DatatypeConfig(16, 8), int8_act=True).int8_act_on
+
+
+def test_serve_adaptive_reports_packed_bits_bytes():
+    """AccelServer telemetry accounts the sub-byte resident bytes per view."""
+    g = _cnn_graph()
+    rng = np.random.default_rng(2)
+    res = DesignFlow(g).run(targets=("qjax",), dtconfig=DatatypeConfig(8, 8),
+                            calib_inputs=(rng.random((2, 28, 28, 1),
+                                                     np.float32),))
+    srv = res.serve_adaptive(POINTS, max_batch=4, max_wait=0.0)
+    x = rng.random((1, 28, 28, 1), np.float32)
+    t = srv.submit(x)
+    srv.pump(flush=True)
+    srv.result(t)
+    bb = srv.stats()["bits_bytes"]
+    packed = res.writers["qjax"].packed
+    assert bb == {b: packed.view_bytes(b) for b in (8, 4, 2)}
+    assert bb[4] <= 0.55 * bb[8] and bb[2] <= 0.30 * bb[8]
+
+
+def test_autotune_cache_persists_across_processes(tmp_path, monkeypatch):
+    """Timed block picks survive the process: a second (simulated) process
+    with a cold in-memory cache reloads them from disk instead of retuning."""
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(qops.AUTOTUNE_CACHE_ENV, str(path))
+    qops._disk_state["path"] = False     # force re-resolve of the env var
+    qops._BLOCK_CACHE.clear()
+    key = (256, 512, 384, 8, False, False, False)
+    qops._BLOCK_CACHE[key] = (128, 128, 256)
+    qops._disk_put(key, (128, 128, 256))
+    assert path.exists()
+    # simulate a fresh process: cold L1, cold disk-state
+    qops._BLOCK_CACHE.clear()
+    qops._disk_state["path"] = False
+    assert pick_blocks(256, 512, 384, 8, interpret=False) == (128, 128, 256)
+    assert qops._BLOCK_CACHE[key] == (128, 128, 256)   # write-through to L1
+    # interpret-mode entries stay process-local (static default, not timed)
+    import json
+    qops._BLOCK_CACHE.clear()
+    pick_blocks(512, 512, 512, 8, interpret=True)
+    assert len(json.loads(path.read_text())) == 1
+
+
+def test_autotune_cache_disable_and_corrupt(tmp_path, monkeypatch):
+    monkeypatch.setenv(qops.AUTOTUNE_CACHE_ENV, "off")
+    qops._disk_state["path"] = False
+    assert qops.autotune_cache_path() is None
+    qops._disk_put((1, 2, 3, 8, False, False, False), (1, 2, 3))  # no-op
+    path = tmp_path / "autotune.json"
+    path.write_text("{not json")
+    monkeypatch.setenv(qops.AUTOTUNE_CACHE_ENV, str(path))
+    qops._disk_state["path"] = False
+    assert qops._disk_cache() == {}      # corrupt cache: retune, don't crash
 
 
 def test_qjax_flow_agrees_with_float_reference():

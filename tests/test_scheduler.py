@@ -109,12 +109,36 @@ def test_queue_depth_backpressure():
 
 def test_submit_validation():
     sched = CoalescingScheduler(max_batch=4, clock=FakeClock())
-    with pytest.raises(ValueError, match="exceeds max_batch"):
-        sched.submit((req(5),))
     with pytest.raises(ValueError, match="leading dim"):
         sched.submit((req(2), req(3)))
     with pytest.raises(ValueError, match="no inputs"):
         sched.submit(())
+
+
+def test_oversize_submit_splits_into_chunks():
+    """A request larger than max_batch no longer raises: it splits into
+    back-to-back chunk requests and returns a parent carrying their rids."""
+    sched = CoalescingScheduler(max_batch=4, max_wait=0.0, clock=FakeClock())
+    parent = sched.submit((req(10),))
+    assert parent.size == 10 and len(parent.children) == 3
+    assert len(sched) == 3  # only the chunks are queued
+    sizes = [r.size for r in sched._queue]
+    assert sizes == [4, 4, 2]
+    # chunks drain contiguously in arrival order
+    seen = []
+    for batch in sched.drain():
+        seen.extend(r.rid for r in batch.requests)
+    assert seen == parent.children
+    s = sched.stats()
+    assert s["split_requests"] == 1 and s["split_chunks"] == 3
+    assert s["submitted"] == 1
+
+
+def test_oversize_submit_respects_queue_depth_atomically():
+    sched = CoalescingScheduler(max_batch=4, queue_depth=2, clock=FakeClock())
+    with pytest.raises(QueueFull):
+        sched.submit((req(12),))  # needs 3 chunk slots, only 2 exist
+    assert len(sched) == 0  # nothing partially enqueued
 
 
 def test_mismatched_request_signature_rejected_at_submit():
@@ -285,6 +309,45 @@ def test_every_ticket_demuxes_its_own_rows():
     srv.drop(td)  # dropped BEFORE execution: output discarded at demux
     srv.pump(flush=True)
     assert not srv._results and not srv._dropped
+
+
+def test_split_request_demuxes_to_one_ticket():
+    """An oversize submission is served in chunks but claimed as ONE ticket
+    whose rows equal the unsplit execution."""
+    res = mlp_flow(seed=3)
+    srv = res.serve(max_batch=4, max_wait=0.0)
+    x = req(11, seed=5)
+    t = srv.submit(x)
+    srv.pump(flush=True)
+    assert_matches(srv.result(t), res.executables["jax"](x))
+    s = srv.stats()
+    assert s["split_requests"] == 1 and s["split_chunks"] == 3
+    assert not srv._results and not srv._split
+
+
+def test_split_request_interleaves_with_normal_traffic():
+    res = mlp_flow(seed=4)
+    srv = res.serve(max_batch=4, max_wait=0.0)
+    a, big, b = req(2, seed=1), req(9, seed=2), req(3, seed=3)
+    ta, tbig, tb = srv.submit(a), srv.submit(big), srv.submit(b)
+    srv.pump(flush=True)
+    naive = res.executables["jax"]
+    assert_matches(srv.result(tbig), naive(big))
+    assert_matches(srv.result(ta), naive(a))
+    assert_matches(srv.result(tb), naive(b))
+
+
+def test_dropped_split_parent_releases_every_chunk():
+    res = mlp_flow(seed=5)
+    srv = res.serve(max_batch=4, max_wait=0.0)
+    t = srv.submit(req(10, seed=6))
+    srv.drop(t)  # before execution
+    srv.pump(flush=True)
+    assert not srv._results and not srv._dropped and not srv._split
+    t2 = srv.submit(req(10, seed=7))
+    srv.pump(flush=True)
+    srv.drop(t2)  # after execution
+    assert not srv._results and not srv._split
 
 
 def test_server_pump_respects_fake_clock():
