@@ -73,9 +73,15 @@ def static_elems(shape) -> int:
 SUPPORTED_OPS = {
     "Conv", "MaxPool", "BatchNormalization", "Relu", "Gemm", "MatMul",
     "Add", "Flatten", "Softmax", "Reshape", "Identity", "Split",
+    # grouped Conv with group == channels and HWIO weights (kh, kw, 1, C);
+    # produced directly by readers or by normalize_groups from an ONNX Conv
+    # carrying a depthwise ``group`` attribute
+    "DepthwiseConv",
     # produced by the fusion pass: Conv with folded BatchNormalization
     # (+ optional trailing Relu, attrs["relu"]=True)
     "FusedConv",
+    # produced by the fusion pass: DepthwiseConv with folded BN (+ Relu)
+    "FusedDepthwiseConv",
     # produced by the fusion pass: Gemm with a folded trailing Relu
     "FusedGemm",
 }

@@ -3,14 +3,17 @@
 The Reader produces a raw IR; before any Writer consumes it, a
 :class:`PassManager` runs a sequence of graph-to-graph rewrites:
 
-1. :func:`fuse_conv_bn_relu` — fold Conv+BatchNormalization(+Relu) chains
-   (also across a single interposed MaxPool) into one ``FusedConv`` actor;
-2. :func:`fold_constants` — evaluate all-constant subgraphs at compile time;
-3. :func:`eliminate_dead_nodes` — drop nodes/initializers unreachable from
+1. :func:`fuse_conv_bn_relu` — fold Conv/DepthwiseConv+BatchNormalization
+   (+Relu) chains (also across a single interposed MaxPool) into one
+   ``FusedConv`` / ``FusedDepthwiseConv`` actor;
+2. :func:`reorder_relu_maxpool` — swap leftover ``Relu -> MaxPool`` chains
+   (Relu commutes with the max window) so FIFOs carry pooled tensors;
+3. :func:`fold_constants` — evaluate all-constant subgraphs at compile time;
+4. :func:`eliminate_dead_nodes` — drop nodes/initializers unreachable from
    the graph outputs (e.g. the folded BN statistics);
-4. :func:`infer_shapes` — annotate every FIFO tensor with shape/dtype
+5. :func:`infer_shapes` — annotate every FIFO tensor with shape/dtype
    (``Graph.value_info``);
-5. :func:`make_assign_precision` — stamp a per-layer ``Dx-Wy``
+6. :func:`make_assign_precision` — stamp a per-layer ``Dx-Wy``
    :class:`~repro.quant.qtypes.DatatypeConfig` onto every node.
 
 ``default_pipeline(dtconfig)`` builds exactly that list;
@@ -26,7 +29,8 @@ from typing import Callable, List, Sequence
 
 from repro.core.ir import Graph
 from repro.core.passes.cleanup import eliminate_dead_nodes, fold_constants
-from repro.core.passes.fusion import fuse_conv_bn_relu, fuse_gemm_relu
+from repro.core.passes.fusion import (fuse_conv_bn_relu, fuse_gemm_relu,
+                                      reorder_relu_maxpool)
 from repro.core.passes.precision import (explore_mixed_precision,
                                          make_assign_precision,
                                          quantizable_layers, strip_precision)
@@ -50,22 +54,24 @@ class PassManager:
 
 def default_pipeline(dtconfig=None) -> List[GraphPass]:
     """The standard compile pipeline: fuse (conv chains, then gemm+relu),
-    fold, sweep, annotate shapes, assign per-layer precision."""
-    return [fuse_conv_bn_relu, fuse_gemm_relu, fold_constants,
-            eliminate_dead_nodes, infer_shapes,
+    reorder leftover Relu->MaxPool chains, fold, sweep, annotate shapes,
+    assign per-layer precision."""
+    return [fuse_conv_bn_relu, fuse_gemm_relu, reorder_relu_maxpool,
+            fold_constants, eliminate_dead_nodes, infer_shapes,
             make_assign_precision(dtconfig)]
 
 
 def structural_pipeline() -> List[GraphPass]:
     """The graph rewrites only (no precision annotation) — what the
     mixed-precision explorer runs before searching datatypes."""
-    return [fuse_conv_bn_relu, fuse_gemm_relu, fold_constants,
-            eliminate_dead_nodes, infer_shapes]
+    return [fuse_conv_bn_relu, fuse_gemm_relu, reorder_relu_maxpool,
+            fold_constants, eliminate_dead_nodes, infer_shapes]
 
 
 __all__ = [
     "GraphPass", "PassManager", "default_pipeline", "structural_pipeline",
-    "infer_shapes", "fuse_conv_bn_relu", "fuse_gemm_relu", "fold_constants",
+    "infer_shapes", "fuse_conv_bn_relu", "fuse_gemm_relu",
+    "reorder_relu_maxpool", "fold_constants",
     "eliminate_dead_nodes", "make_assign_precision",
     "explore_mixed_precision", "quantizable_layers", "strip_precision",
 ]

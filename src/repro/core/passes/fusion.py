@@ -22,6 +22,12 @@ consumer and must not be graph outputs.
 whose single consumer is a ``Relu`` becomes one ``FusedGemm`` actor, so the
 fully-connected stack reaches the fused kernel epilogue (bias + ReLU +
 activation quant in-VMEM) the same way FusedConv does.
+
+``DepthwiseConv`` chains fuse identically (BN's per-channel affine
+broadcasts over the HWIO depthwise weight's last dim), emitting
+``FusedDepthwiseConv``.  :func:`reorder_relu_maxpool` is the remaining
+window-commutation rewrite: leftover ``Relu -> MaxPool`` chains swap so the
+inter-actor FIFO carries the pooled tensor.
 """
 from __future__ import annotations
 
@@ -71,6 +77,37 @@ def fuse_gemm_relu(graph: Graph) -> Graph:
     return g
 
 
+def reorder_relu_maxpool(graph: Graph) -> Graph:
+    """Swap ``Relu -> MaxPool`` chains into ``MaxPool -> Relu``.
+
+    Relu is monotone, so it commutes with the per-channel max window —
+    ``Pool(Relu(x)) == Relu(Pool(x))`` elementwise.  Pooling first shrinks
+    the tensor the Relu actor (and the FIFO feeding it) carries by the pool
+    window's area, and leaves the Relu adjacent to whatever consumes it —
+    where the Conv/Gemm fusion passes can claim it.  Runs after the fusion
+    passes so it only reorders chains those passes left behind."""
+    swaps: Dict[str, Node] = {}       # node name -> replacement
+    for relu in graph.nodes:
+        if relu.op != "Relu":
+            continue
+        pool = _single_consumer(graph, relu.outputs[0])
+        if pool is None or pool.op != "MaxPool":
+            continue
+        pre = f"{pool.name}_pre_relu"
+        # the pool moves to the Relu's slot (consuming its input), the Relu
+        # to the pool's slot (producing its output) — topo order preserved
+        swaps[relu.name] = Node("MaxPool", pool.name, [relu.inputs[0]], [pre],
+                                dict(pool.attrs), dtconfig=pool.dtconfig)
+        swaps[pool.name] = Node("Relu", relu.name, [pre], [pool.outputs[0]],
+                                dict(relu.attrs), dtconfig=relu.dtconfig)
+    if not swaps:
+        return graph
+    g = Graph(graph.name, [swaps.get(n.name, n) for n in graph.nodes],
+              graph.inputs, graph.outputs, graph.initializers)
+    g.validate()
+    return g
+
+
 def fuse_conv_bn_relu(graph: Graph) -> Graph:
     inits = dict(graph.initializers)
     drop = set()                      # node names removed by fusion
@@ -78,7 +115,7 @@ def fuse_conv_bn_relu(graph: Graph) -> Graph:
     pool_rewire: Dict[str, str] = {}  # pool name -> new output tensor name
 
     for conv in graph.nodes:
-        if conv.op != "Conv":
+        if conv.op not in ("Conv", "DepthwiseConv"):
             continue
         nxt = _single_consumer(graph, conv.outputs[0])
         pool = None
@@ -129,7 +166,8 @@ def fuse_conv_bn_relu(graph: Graph) -> Graph:
         else:
             outs = [conv.outputs[0]]
             pool_rewire[pool.name] = tail.outputs[0]
-        fused[conv.name] = Node("FusedConv", conv.name, fin, outs, attrs,
+        fop = "FusedDepthwiseConv" if conv.op == "DepthwiseConv" else "FusedConv"
+        fused[conv.name] = Node(fop, conv.name, fin, outs, attrs,
                                 dtconfig=conv.dtconfig)
         drop.add(bn.name)
         if relu is not None:

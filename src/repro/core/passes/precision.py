@@ -26,7 +26,8 @@ from repro.core.ir import Graph, Node
 from repro.quant.qtypes import DatatypeConfig, PrecisionMap
 
 # ops with weight initializers worth exploring per-layer
-WEIGHT_OPS = ("Conv", "FusedConv", "Gemm", "FusedGemm", "MatMul")
+WEIGHT_OPS = ("Conv", "FusedConv", "DepthwiseConv", "FusedDepthwiseConv",
+              "Gemm", "FusedGemm", "MatMul")
 
 
 def _as_map(dt) -> Optional[PrecisionMap]:

@@ -48,6 +48,30 @@ def _conv_spatial(size: int, k: int, s: int, pads, axis: int) -> int:
 @_rule("FusedConv")
 def _shape_conv(node: Node, ins: List[Shape]) -> List[Shape]:
     x, w = ins[0], ins[1]                      # NHWC, HWIO
+    if int(node.attrs.get("group", 1)) != 1:
+        raise ValueError(
+            f"node {node.name}: grouped Conv must be normalized before "
+            "inference (reader.normalize_groups rewrites depthwise groups "
+            "to DepthwiseConv)")
+    kh, kw = node.attrs.get("kernel_shape", w[:2])
+    sh, sw = node.attrs.get("strides", (1, 1))
+    pads = node.attrs.get("pads", "SAME")
+    return [(x[0], _conv_spatial(x[1], kh, sh, pads, 0),
+             _conv_spatial(x[2], kw, sw, pads, 1), w[3])]
+
+
+@_rule("DepthwiseConv")
+@_rule("FusedDepthwiseConv")
+def _shape_depthwise(node: Node, ins: List[Shape]) -> List[Shape]:
+    x, w = ins[0], ins[1]                      # NHWC, HWIO (kh, kw, 1, C)
+    if int(w[2]) != 1:
+        raise ValueError(
+            f"node {node.name}: depthwise weights must be (kh, kw, 1, C), "
+            f"got {tuple(w)}")
+    if not is_symbolic(x[3]) and int(x[3]) != int(w[3]):
+        raise ValueError(
+            f"node {node.name}: depthwise channel mismatch — input has "
+            f"{x[3]} channels, weights {w[3]}")
     kh, kw = node.attrs.get("kernel_shape", w[:2])
     sh, sw = node.attrs.get("strides", (1, 1))
     pads = node.attrs.get("pads", "SAME")

@@ -21,16 +21,48 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.configs.mnist_cnn import CNNConfig
+from repro.configs.separable_cnn import SeparableCNNConfig
 from repro.core.ir import BATCH, Dim, Graph, Node, TensorInfo
 from repro.core.passes.shape_infer import infer_shapes
 
 
+def normalize_groups(graph: Graph) -> Graph:
+    """Rewrite ONNX grouped Convs into the IR's explicit ops.
+
+    ``group == 1`` (or absent) stays a plain Conv (the attribute is dropped);
+    ``group == C`` with HWIO weights (kh, kw, 1, C) becomes DepthwiseConv —
+    the form the direct Pallas kernel consumes.  Anything between (grouped
+    but not depthwise) has no lowering here and is rejected up front rather
+    than miscompiled downstream.
+    """
+    for node in graph.nodes:
+        if node.op != "Conv" or "group" not in node.attrs:
+            continue
+        group = int(node.attrs["group"])
+        if group == 1:
+            del node.attrs["group"]
+            continue
+        w = graph.initializers.get(node.inputs[1])
+        if w is None:
+            raise ValueError(
+                f"grouped Conv '{node.name}' needs an initializer weight to "
+                f"normalize (input '{node.inputs[1]}' is activation-fed)")
+        if w.ndim != 4 or w.shape[2] != 1 or w.shape[3] != group:
+            raise ValueError(
+                f"Conv '{node.name}' with group={group} is not depthwise "
+                f"(weights {tuple(w.shape)}, expected (kh, kw, 1, {group})); "
+                f"general grouped conv has no lowering")
+        node.op = "DepthwiseConv"
+        del node.attrs["group"]
+    return graph
+
+
 def read_json(text: str, weights: Optional[Dict[str, np.ndarray]] = None) -> Graph:
-    return infer_shapes(Graph.from_json(text, weights))
+    return infer_shapes(normalize_groups(Graph.from_json(text, weights)))
 
 
 def read_file(path: str) -> Graph:
-    return infer_shapes(Graph.load(path))
+    return infer_shapes(normalize_groups(Graph.load(path)))
 
 
 def cnn_to_ir(cfg: CNNConfig, params: Dict[str, np.ndarray],
@@ -70,6 +102,70 @@ def cnn_to_ir(cfg: CNNConfig, params: Dict[str, np.ndarray],
     bdim: Dim = BATCH if batch is None else int(batch)
     g = Graph(
         name="mnist-cnn",
+        nodes=nodes,
+        inputs=[TensorInfo("input", (bdim, cfg.image_hw[0], cfg.image_hw[1],
+                                     cfg.in_channels))],
+        outputs=["logits"],
+        initializers=inits,
+    )
+    g.validate()
+    return infer_shapes(g)
+
+
+def separable_cnn_to_ir(cfg: SeparableCNNConfig, params: Dict[str, np.ndarray],
+                        batch: Optional[int] = None) -> Graph:
+    """The MobileNet-style depthwise-separable classifier as an IR graph.
+
+    Conv stem + Relu + MaxPool, then per block DepthwiseConv(3x3, stride) +
+    BN + Relu and pointwise Conv(1x1) + BN + Relu, Flatten, Gemm.  The stem's
+    Relu -> MaxPool order is the textbook (commutable) one — the reordering
+    pass swaps it so the FIFO between them carries the pooled tensor.
+    Layout NHWC; depthwise weights HWIO (kh, kw, 1, C).
+    """
+    k = cfg.kernel_size
+    nodes = []
+    inits: Dict[str, np.ndarray] = {}
+    inits["stem/w"] = np.asarray(params["stem/w"])
+    inits["stem/b"] = np.asarray(params["stem/b"])
+    nodes.append(Node("Conv", "stem", ["input", "stem/w", "stem/b"],
+                      ["stem_out"],
+                      {"kernel_shape": [k, k], "pads": "SAME",
+                       "strides": [1, 1]}))
+    nodes.append(Node("Relu", "stem_relu", ["stem_out"], ["stem_relu_out"]))
+    nodes.append(Node("MaxPool", "stem_pool", ["stem_relu_out"], ["pool_out"],
+                      {"kernel_shape": [cfg.pool] * 2,
+                       "strides": [cfg.pool] * 2}))
+    x = "pool_out"
+    for i, (cout, stride) in enumerate(cfg.blocks):
+        for layer, conv_op, attrs in (
+                (f"dw{i}", "DepthwiseConv",
+                 {"kernel_shape": [k, k], "pads": "SAME",
+                  "strides": [stride, stride]}),
+                (f"pw{i}", "Conv",
+                 {"kernel_shape": [1, 1], "pads": "VALID",
+                  "strides": [1, 1]})):
+            inits[f"{layer}/w"] = np.asarray(params[f"{layer}/w"])
+            inits[f"{layer}/b"] = np.asarray(params[f"{layer}/b"])
+            nodes.append(Node(conv_op, layer, [x, f"{layer}/w", f"{layer}/b"],
+                              [f"{layer}_out"], attrs))
+            for stat in ("scale", "bias", "mean", "var"):
+                inits[f"{layer}_bn/{stat}"] = np.asarray(
+                    params[f"{layer}_bn/{stat}"])
+            nodes.append(Node("BatchNormalization", f"{layer}_bn",
+                              [f"{layer}_out", f"{layer}_bn/scale",
+                               f"{layer}_bn/bias", f"{layer}_bn/mean",
+                               f"{layer}_bn/var"], [f"{layer}_bn_out"],
+                              {"epsilon": 1e-5}))
+            nodes.append(Node("Relu", f"{layer}_relu", [f"{layer}_bn_out"],
+                              [f"{layer}_relu_out"]))
+            x = f"{layer}_relu_out"
+    nodes.append(Node("Flatten", "flatten", [x], ["flat"]))
+    inits["fc/w"] = np.asarray(params["fc/w"])
+    inits["fc/b"] = np.asarray(params["fc/b"])
+    nodes.append(Node("Gemm", "fc", ["flat", "fc/w", "fc/b"], ["logits"]))
+    bdim: Dim = BATCH if batch is None else int(batch)
+    g = Graph(
+        name=cfg.name,
         nodes=nodes,
         inputs=[TensorInfo("input", (bdim, cfg.image_hw[0], cfg.image_hw[1],
                                      cfg.in_channels))],

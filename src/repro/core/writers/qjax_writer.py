@@ -14,6 +14,10 @@ those codes instead of an f32 ``@``/``conv`` over fake-quantized float copies:
   fused into the same epilogue (kernel path), or to an XLA conv over the
   dequantized view (ref path — XLA folds the dequant of constant codes into
   a constant weight, so the CPU fallback costs exactly one conv);
+* ``DepthwiseConv`` / ``FusedDepthwiseConv`` call the *direct* channel-
+  parallel :mod:`repro.kernels.qconv_dw` kernels — no im2col patch tensor is
+  ever materialized (``dw_mode="im2col"`` restores the legacy dense-expansion
+  lowering as a differential baseline);
 * the active working point ``bits`` is a parameter of ``build`` /
   ``build_batched``, NOT baked into the weights: every point executable
   reads the SAME :class:`PackedWeights` buffer, so ``AccelServer`` switching
@@ -50,6 +54,9 @@ import jax.numpy as jnp
 from repro.core.ir import Graph, Node
 from repro.core.writers.jax_writer import BatchedExecutable, JaxWriter
 from repro.core.writers.registry import OP_REGISTRY, register_op, resolve
+from repro.kernels.qconv_dw.ops import (DW_PACK_ALIGN, qconv_dw,
+                                        qconv_dw_int8_act)
+from repro.kernels.qconv_dw.ref import expand_dw_codes, normalize_pads
 from repro.kernels.qmatmul.ops import (qgemm, qmatmul_int8_act,
                                        resolve_interpret)
 from repro.kernels.qmatmul.ref import epilogue_ref, exact_in_f32
@@ -350,6 +357,86 @@ def _qconv_node(node: Node, env, relu: bool):
     return y
 
 
+def _qdwconv_node(node: Node, env, relu: bool):
+    """DepthwiseConv/FusedDepthwiseConv lowering.
+
+    ``dw_mode="direct"`` (default) calls the :mod:`repro.kernels.qconv_dw`
+    family — no patch tensor, channel-parallel window MACs, the producer's
+    int8 codes consumed directly and the consumer's codes emitted from the
+    fused epilogue, sub-byte W4/W2 streamed at the small depthwise packing
+    alignment.  ``dw_mode="im2col"`` runs the legacy lowering the direct
+    kernels replace — the depthwise taps block-diagonally expanded to a dense
+    (kh*kw*C, C) matrix through im2col + qgemm — kept as the differential
+    baseline (bit-exact vs direct in fully-integer mode: same integer
+    accumulators, same power-of-two folds) and the benchmark's foil."""
+    ctx = env.get(QCTX)
+    w = env.get(node.inputs[1])
+    if ctx is None or not isinstance(w, PackedTensor):
+        return None
+    x = env[node.inputs[0]]
+    bias = env[node.inputs[2]] if len(node.inputs) > 2 else None
+    kh, kw, _, c = w.codes.shape
+    strides = tuple(int(s) for s in node.attrs.get("strides", (1, 1)))
+    pads = normalize_pads(node.attrs.get("pads", "SAME"))
+    out = node.outputs[0]
+    bits = ctx.weight_bits(node)
+    oqt = ctx.code_qt(out, node) if isinstance(x, ActCode) else None
+    aqt = (oqt.frac, oqt.qmin, oqt.qmax) if oqt is not None \
+        else ctx.act_qt(out, node)
+
+    if ctx.writer.dw_mode == "im2col":
+        # differential baseline: dense block-diagonal expansion, patch blowup
+        dense = expand_dw_codes(jnp.asarray(w.codes))
+        if isinstance(x, ActCode):
+            patches, oh, ow = im2col(x.codes, kh, kw, strides, pads)
+            y = qmatmul_int8_act(patches.reshape(-1, patches.shape[-1]),
+                                 x.qt.scale, dense, w.scale_1d(), bias,
+                                 bits=bits, relu=relu, act_qt=aqt,
+                                 out_code=oqt is not None,
+                                 interpret=ctx.writer.interpret,
+                                 use_kernel=ctx.writer.kernel_enabled(),
+                                 out_dtype=jnp.float32)
+            y = y.reshape(x.codes.shape[0], oh, ow, c)
+        else:
+            patches, oh, ow = im2col(x, kh, kw, strides, pads)
+            y = qgemm(patches.reshape(-1, patches.shape[-1]), dense,
+                      w.scale_1d(), bias, bits=bits, relu=relu, act_qt=aqt,
+                      interpret=ctx.writer.interpret,
+                      use_kernel=ctx.writer.kernel_enabled())
+            y = y.reshape(x.shape[0], oh, ow, c)
+    else:
+        if ctx.writer.packed_storage and bits in SUB_BYTE_BITS:
+            codes_arg, packed = w.packed_view(bits, align=DW_PACK_ALIGN), True
+        else:
+            codes_arg, packed = w.codes_2d(), False
+        common = dict(kh=kh, kw=kw, strides=strides, pads=pads, bits=bits,
+                      relu=relu, act_qt=aqt, packed=packed,
+                      interpret=ctx.writer.interpret,
+                      use_kernel=ctx.writer.kernel_enabled())
+        if isinstance(x, ActCode):
+            y = qconv_dw_int8_act(x.codes, x.qt.scale, codes_arg,
+                                  w.scale_1d(), bias,
+                                  out_code=oqt is not None,
+                                  out_dtype=jnp.float32, **common)
+        else:
+            y = qconv_dw(x, codes_arg, w.scale_1d(), bias, **common)
+    ctx.mark_fused(out)
+    return ActCode(y, oqt) if oqt is not None else y
+
+
+@register_op("DepthwiseConv", target="qjax")
+def _op_dwconv_qjax(node: Node, env):
+    y = _qdwconv_node(node, env, relu=False)
+    return y if y is not None else _jax_fallback("DepthwiseConv", node, env)
+
+
+@register_op("FusedDepthwiseConv", target="qjax")
+def _op_fused_dwconv_qjax(node: Node, env):
+    y = _qdwconv_node(node, env, relu=bool(node.attrs.get("relu")))
+    return y if y is not None else _jax_fallback("FusedDepthwiseConv", node,
+                                                 env)
+
+
 @register_op("Conv", target="qjax")
 def _op_conv_qjax(node: Node, env):
     y = _qconv_node(node, env, relu=False)
@@ -413,7 +500,10 @@ class QJaxWriter(JaxWriter):
       the default activation precision fits int8), True/False to force;
     * ``packed_weights`` — None (auto: sub-byte packed W4/W2 buffers on the
       kernel path), True/False to force (the ref path unpacks at trace time,
-      so forcing it on stays bit-exact).
+      so forcing it on stays bit-exact);
+    * ``dw_mode`` — ``"direct"`` (default: the :mod:`repro.kernels.qconv_dw`
+      family, no im2col materialization) or ``"im2col"`` (the legacy dense
+      block-diagonal lowering, kept as the differential baseline).
     """
 
     target = "qjax"
@@ -425,12 +515,17 @@ class QJaxWriter(JaxWriter):
                  interpret: Optional[bool] = None,
                  default_bits: Optional[int] = None,
                  int8_act: Optional[bool] = None,
-                 packed_weights: Optional[bool] = None):
+                 packed_weights: Optional[bool] = None,
+                 dw_mode: str = "direct"):
+        if dw_mode not in ("direct", "im2col"):
+            raise ValueError(f"dw_mode must be 'direct' or 'im2col', "
+                             f"got {dw_mode!r}")
         self.use_kernel = use_kernel
         self.interpret = interpret
         self._default_bits = default_bits
         self._int8_act = int8_act
         self._packed_weights = packed_weights
+        self.dw_mode = dw_mode
         super().__init__(graph, dtconfig, act_ranges)
 
     # -- packed weights ------------------------------------------------------

@@ -75,6 +75,30 @@ def _op_fused_conv(node: Node, env):
     return y
 
 
+@register_op("DepthwiseConv")
+def _op_depthwise_conv(node: Node, env):
+    x, w = env[node.inputs[0]], env[node.inputs[1]]
+    pads = node.attrs.get("pads", "SAME")
+    strides = tuple(node.attrs.get("strides", (1, 1)))
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=strides, padding=pads,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1])
+    if len(node.inputs) > 2:
+        y = y + env[node.inputs[2]]
+    return y
+
+
+@register_op("FusedDepthwiseConv")
+def _op_fused_depthwise_conv(node: Node, env):
+    """DepthwiseConv with BN folded into W/b by the fusion pass;
+    attrs["relu"] applies the folded trailing activation."""
+    y = _op_depthwise_conv(node, env)
+    if node.attrs.get("relu"):
+        y = jax.nn.relu(y)
+    return y
+
+
 @register_op("MaxPool")
 def _op_maxpool(node: Node, env):
     x = env[node.inputs[0]]

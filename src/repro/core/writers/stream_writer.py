@@ -15,9 +15,11 @@ Every connection carries a concrete ``depth`` (elements) derived from the
 producer tensor's ``Graph.value_info`` annotation — the buffer a streaming
 implementation must provision before the consumer can fire:
 
-* **windowed consumers** (Conv / FusedConv / MaxPool) use the line-buffer
-  model: ``(kh - 1)`` full image rows plus ``kw`` pixels of the NHWC stream,
-  i.e. ``(kh - 1) * W * C + kw * C`` elements;
+* **windowed consumers** (Conv / FusedConv / DepthwiseConv /
+  FusedDepthwiseConv / MaxPool) use the line-buffer model: ``(kh - 1)`` full
+  image rows plus ``kw`` pixels of the NHWC stream, i.e.
+  ``(kh - 1) * W * C + kw * C`` elements — grouping does not change the
+  firing rule, the NHWC stream buffers every channel of a pixel anyway;
 * **matrix consumers** (Gemm / MatMul) need the whole per-item activation
   vector resident before the first MAC, so the depth is the tensor's static
   per-item volume;
@@ -62,8 +64,12 @@ def _op_fused_conv_stream(node: Node, env):
 
 
 _CONV_OPS = ("Conv", "FusedConv")
+# grouped (depthwise) consumers: same line-buffer firing rule as Conv — the
+# NHWC stream buffers all C channels per pixel regardless of grouping, so the
+# depth formula is shared; the actor template differs (no im2col/patch stage)
+_DW_OPS = ("DepthwiseConv", "FusedDepthwiseConv")
 # consumers whose firing rule needs a sliding window of the input stream
-_WINDOWED_OPS = ("Conv", "FusedConv", "MaxPool")
+_WINDOWED_OPS = _CONV_OPS + _DW_OPS + ("MaxPool",)
 # consumers that reduce over the whole per-item activation vector
 _MATRIX_OPS = ("Gemm", "FusedGemm", "MatMul")
 
@@ -112,16 +118,26 @@ class StreamWriter(JaxWriter):
         actors = []
         for n in order:
             is_conv = n.op in _CONV_OPS
-            actor = {"name": n.name, "class": n.op,
-                     "target": "pallas/conv2d_stream" if is_conv else "jax"}
+            is_dw = n.op in _DW_OPS
             if is_conv:
+                target = "pallas/conv2d_stream"
+            elif is_dw:
+                target = "pallas/qconv_dw"
+            else:
+                target = "jax"
+            actor = {"name": n.name, "class": n.op, "target": target}
+            if is_conv or is_dw:
                 w = self.graph.initializers[n.inputs[1]]
-                sub = ["LineBuffer", "ConvActor", "WeightActor", "BiasActor"]
+                # the depthwise actor MACs each channel against its own taps
+                # straight out of the line buffer — no patch/im2col stage
+                sub = ["LineBuffer",
+                       "DepthwiseActor" if is_dw else "ConvActor",
+                       "WeightActor", "BiasActor"]
                 if n.attrs.get("relu"):
                     sub.append("ReluActor")
                 actor["sub_actors"] = sub
                 actor["weight_shape"] = list(w.shape)
-                if n.op == "FusedConv":
+                if n.op in ("FusedConv", "FusedDepthwiseConv"):
                     actor["fused"] = n.attrs.get("fused_from", [])
             actors.append(actor)
         conns = []

@@ -1,0 +1,164 @@
+"""Pure-jnp oracle for the direct depthwise conv kernels.
+
+THE bit-exactness contract of :mod:`repro.kernels.qconv_dw.kernel` lives
+here: the references accumulate the ``kh * kw`` shifted-window products in
+exactly the kernel's order (dy-major, then dx) over the *code domain* and
+apply the per-channel scale once at the end — the same operation sequence the
+Pallas kernel traces in-VMEM.  On the fully-integer path (int8 activation
+codes, int32 MACs, power-of-two scale folds — see the argument in
+``qmatmul.ref``) interpret-mode kernel outputs match these references
+bit-for-bit; the float-activation path computes the same exact products but
+XLA's fma contraction of the scale/bias epilogue can differ from the eager
+reference by an ulp, so float-path comparisons use an ulp-of-max tolerance
+(the same contract qmatmul's float path carries).
+
+Also home to the canonical spatial padding math (:func:`pad_amounts` /
+:func:`normalize_pads` — shared with the writers' im2col lowering) and
+:func:`expand_dw_codes`, the block-diagonal dense expansion that lets the
+legacy im2col + qgemm path run a depthwise conv as the differential baseline
+(it materializes the ``kh*kw``-times-larger patch tensor the direct kernel
+exists to kill).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.qmatmul.ref import (ActQt, epilogue_code_ref, epilogue_ref,
+                                       exact_in_f32)
+from repro.quant.ptq import derive_view
+
+__all__ = ["pad_amounts", "normalize_pads", "out_spatial", "expand_dw_codes",
+           "qconv_dw_ref", "qconv_dw_int8_act_ref", "ActQt"]
+
+
+def pad_amounts(size: int, k: int, s: int, pads) -> Tuple[int, Tuple[int, int]]:
+    """(out_dim, (lo, hi)) for one spatial dim — matches XLA's SAME/VALID."""
+    if pads == "SAME":
+        o = -(-size // s)
+        pad = max((o - 1) * s + k - size, 0)
+        return o, (pad // 2, pad - pad // 2)
+    if pads == "VALID":
+        return (size - k) // s + 1, (0, 0)
+    lo, hi = pads
+    return (size + lo + hi - k) // s + 1, (int(lo), int(hi))
+
+
+def normalize_pads(pads):
+    """Canonical *hashable* padding spec: ``"SAME"`` / ``"VALID"`` pass
+    through; explicit pads normalize to ``((top, bottom), (left, right))``
+    from either that pair-of-pairs form or the flat ONNX ``[t, l, b, r]``."""
+    if isinstance(pads, str):
+        return pads
+    p = list(pads)
+    if len(p) == 4 and not hasattr(p[0], "__len__"):
+        t, l, b, r = (int(v) for v in p)
+        return ((t, b), (l, r))
+    return tuple((int(lo), int(hi)) for lo, hi in p)
+
+
+def _split_pads(pads):
+    """Per-axis pad spec for :func:`pad_amounts` from a normalized spec."""
+    if isinstance(pads, str):
+        return pads, pads
+    return pads[0], pads[1]
+
+
+def out_spatial(h: int, w: int, kh: int, kw: int, strides, pads
+                ) -> Tuple[int, int, Tuple[int, int], Tuple[int, int]]:
+    """(OH, OW, (ph_lo, ph_hi), (pw_lo, pw_hi)) for a conv window."""
+    ph, pw = _split_pads(normalize_pads(pads))
+    oh, hpad = pad_amounts(h, kh, strides[0], ph)
+    ow, wpad = pad_amounts(w, kw, strides[1], pw)
+    return oh, ow, hpad, wpad
+
+
+def expand_dw_codes(codes):
+    """Depthwise HWIO codes (kh, kw, 1, C) -> the block-diagonal dense
+    (kh*kw*C, C) int8 matrix the im2col + qgemm path consumes.
+
+    Row ``pos*C + cin`` holds the weight of patch position ``pos`` (dy-major,
+    dx) and input channel ``cin`` for every output channel — zero except at
+    ``cin == cout``, matching :func:`~repro.core.writers.qjax_writer.im2col`'s
+    (dy, dx, channel) patch layout.  Nested truncation maps zeros to zeros,
+    so the ``bits``-bit view of the expansion IS the expansion of the
+    ``bits``-bit view — the baseline stays differential at every working
+    point."""
+    kh, kw, one, c = codes.shape
+    assert one == 1, f"depthwise codes must be (kh, kw, 1, C), got {codes.shape}"
+    eye = jnp.eye(c, dtype=codes.dtype)
+    k2 = codes.reshape(kh * kw, c)
+    return (k2[:, None, :] * eye[None, :, :]).reshape(kh * kw * c, c)
+
+
+def _accumulate(xp, wmat, oh: int, ow: int, kh: int, kw: int, strides):
+    """The kernel-ordered window accumulation: xp (B, Hp, Wp, C) f32 padded
+    input, wmat (kh*kw, C) f32 per-tap weights -> (B, oh, ow, C) f32."""
+    sh, sw = strides
+    acc = jnp.zeros((xp.shape[0], oh, ow, xp.shape[3]), jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            seg = xp[:, dy:dy + sh * (oh - 1) + 1:sh,
+                     dx:dx + sw * (ow - 1) + 1:sw, :]
+            acc = acc + seg * wmat[dy * kw + dx][None, None, None, :]
+    return acc
+
+
+def qconv_dw_ref(x, codes, scale, bias=None, *, kh: int, kw: int,
+                 strides=(1, 1), pads="SAME", bits: int = 8,
+                 relu: bool = False, act_qt: Optional[ActQt] = None,
+                 out_dtype=jnp.float32):
+    """Float-activation depthwise conv over the ``bits``-bit code view.
+
+    x: (B, H, W, C) float; codes: (kh*kw, C) int8 master; scale: (C,) f32.
+    Accumulates x * code products (scale applied ONCE after the window sum —
+    the kernel's order, not dequant-first) then runs the shared epilogue."""
+    B, H, W, C = x.shape
+    oh, ow, hpad, wpad = out_spatial(H, W, kh, kw, strides, pads)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), hpad, wpad, (0, 0)))
+    wmat = derive_view(codes, bits).astype(jnp.float32)
+    acc = _accumulate(xp, wmat, oh, ow, kh, kw, strides)
+    y = acc * scale.reshape(1, 1, 1, -1).astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.reshape(1, 1, 1, -1).astype(jnp.float32)
+    return epilogue_ref(y, relu, act_qt).astype(out_dtype)
+
+
+def qconv_dw_int8_act_ref(x_codes, x_scale, codes, scale, bias=None, *,
+                          kh: int, kw: int, strides=(1, 1), pads="SAME",
+                          bits: int = 8, relu: bool = False,
+                          act_qt: Optional[ActQt] = None,
+                          out_code: bool = False, out_dtype=jnp.float32):
+    """Fully-integer depthwise conv oracle: x_codes (B, H, W, C) int8, the
+    scalar power-of-two producer scale folded into the per-channel weight
+    scale (the kernel's fold — bit-identical), integer window accumulation
+    (exact in f32 for any real window: ``kh*kw * 128 * 127 << 2^24``), and
+    the shared requant epilogue.  ``out_code=True`` returns int8 codes."""
+    B, H, W, C = x_codes.shape
+    oh, ow, hpad, wpad = out_spatial(H, W, kh, kw, strides, pads)
+    xp = jnp.pad(x_codes, ((0, 0), hpad, wpad, (0, 0)))
+    wmat = derive_view(codes, bits)
+    if exact_in_f32(kh * kw):
+        acc = _accumulate(xp.astype(jnp.float32), wmat.astype(jnp.float32),
+                          oh, ow, kh, kw, strides)
+    else:
+        sh, sw = strides
+        iacc = jnp.zeros((B, oh, ow, C), jnp.int32)
+        for dy in range(kh):
+            for dx in range(kw):
+                seg = xp[:, dy:dy + sh * (oh - 1) + 1:sh,
+                         dx:dx + sw * (ow - 1) + 1:sw, :]
+                iacc = iacc + seg.astype(jnp.int32) \
+                    * wmat[dy * kw + dx].astype(jnp.int32)[None, None, None, :]
+        acc = iacc.astype(jnp.float32)
+    xs = jnp.asarray(x_scale, jnp.float32)
+    assert xs.ndim == 0 or xs.size == 1, \
+        "depthwise int8-act path takes a scalar (per-tensor) activation scale"
+    y = acc * (scale.reshape(1, 1, 1, -1).astype(jnp.float32) * xs.reshape(()))
+    if bias is not None:
+        y = y + bias.reshape(1, 1, 1, -1).astype(jnp.float32)
+    if out_code:
+        assert act_qt is not None, "out_code needs the output act_qt"
+        return epilogue_code_ref(y, relu, act_qt).astype(jnp.int8)
+    return epilogue_ref(y, relu, act_qt).astype(out_dtype)

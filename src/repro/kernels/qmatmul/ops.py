@@ -22,14 +22,13 @@ processes.
 from __future__ import annotations
 
 import functools
-import json
-import os
 import time
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.qmatmul.kernel import (ActQt, build_call, DEFAULT_BM,
                                           DEFAULT_BN, DEFAULT_BK)
 from repro.kernels.qmatmul.ref import (qgemm_ref, qmatmul_int8_act_ref,
@@ -66,22 +65,11 @@ _BLOCK_CACHE: Dict[Tuple[int, int, int, int, bool, bool, bool],
 _CANDIDATE_BLOCKS = ((128, 128, 512), (128, 256, 512), (256, 128, 512),
                      (128, 128, 256), (256, 256, 512))
 
-AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
-# loaded disk state: {"path": resolved path or None, "data": {key: blocks}};
-# re-resolved when the env var changes (tests point it at tmp dirs)
-_disk_state: Dict[str, object] = {"path": False, "data": {}}
-
-
-def autotune_cache_path() -> Optional[str]:
-    """Resolved disk-cache path, or None when persistence is disabled."""
-    p = os.environ.get(AUTOTUNE_CACHE_ENV)
-    if p is None:
-        return os.path.join(os.path.expanduser("~"), ".cache", "repro",
-                            "autotune.json")
-    p = p.strip()
-    if p.lower() in ("", "0", "off", "none"):
-        return None
-    return os.path.expanduser(p)
+# the disk half lives in repro.kernels.autotune (one versioned file shared
+# by every kernel family); these aliases keep the historical module-level API
+AUTOTUNE_CACHE_ENV = autotune.AUTOTUNE_CACHE_ENV
+_disk_state = autotune._disk_state          # shared BY IDENTITY with autotune
+autotune_cache_path = autotune.autotune_cache_path
 
 
 def _disk_key(key) -> str:
@@ -89,38 +77,12 @@ def _disk_key(key) -> str:
     return f"{M}:{K}:{N}:{bits}:{int(int8_act)}:{int(packed)}"
 
 
-def _disk_cache() -> Dict[str, Tuple[int, int, int]]:
-    path = autotune_cache_path()
-    if _disk_state["path"] != path:
-        data: Dict[str, Tuple[int, int, int]] = {}
-        if path is not None and os.path.exists(path):
-            try:
-                with open(path) as f:
-                    raw = json.load(f)
-                data = {k: tuple(int(b) for b in v) for k, v in raw.items()
-                        if isinstance(v, (list, tuple)) and len(v) == 3}
-            except (OSError, ValueError):
-                data = {}   # corrupt/unreadable cache: retune, then rewrite
-        _disk_state["path"] = path
-        _disk_state["data"] = data
-    return _disk_state["data"]  # type: ignore[return-value]
+def _disk_cache() -> Dict[str, Tuple[int, ...]]:
+    return autotune.disk_cache()
 
 
 def _disk_put(key, blocks: Tuple[int, int, int]) -> None:
-    path = autotune_cache_path()
-    if path is None:
-        return
-    data = _disk_cache()
-    data[_disk_key(key)] = tuple(blocks)
-    try:
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        tmp = f"{path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump({k: list(v) for k, v in sorted(data.items())}, f,
-                      indent=1)
-        os.replace(tmp, path)   # atomic: concurrent tuners never see partials
-    except OSError:
-        pass                    # telemetry-grade persistence: never fail a call
+    autotune.disk_put(_disk_key(key), blocks)
 
 
 def _default_blocks(M: int, K: int, N: int) -> Tuple[int, int, int]:
@@ -175,7 +137,7 @@ def pick_blocks(M: int, K: int, N: int, bits: int, interpret: bool,
         _BLOCK_CACHE[key] = default
         return default
     disk = _disk_cache().get(_disk_key(key))
-    if disk is not None:
+    if disk is not None and len(disk) == 3:
         _BLOCK_CACHE[key] = disk
         return disk
     r = (8 // bits) if packed else 1

@@ -8,6 +8,12 @@ chip, 819 GB/s HBM, ~50 GB/s/link ICI.
 parsed from the compiled HLO text: per op, wire bytes on the slowest link of a
 ring schedule (2(n-1)/n for all-reduce, (n-1)/n for gather/scatter/all-to-all,
 1x for collective-permute).
+
+:func:`im2col_scratch_bytes` is the CNN-side byte term: the patch tensor an
+im2col conv lowering materializes, which neither HLO ``cost_analysis`` (the
+interpreter never compiles it as one program) nor the FIFO model accounts
+for.  ``benchmarks/qpath_latency.py`` emits it per row so the direct
+depthwise kernel's byte savings are visible in the report.
 """
 from __future__ import annotations
 
@@ -157,6 +163,55 @@ class RooflineReport:
             "step_s": self.step_s, "useful_flops_ratio": self.useful_flops_ratio,
             "mfu": self.mfu,
         }
+
+
+# ---------------------------------------------------------------------------
+# im2col scratch accounting (qpath conv lowering)
+# ---------------------------------------------------------------------------
+
+_IM2COL_OPS = ("Conv", "FusedConv")
+_IM2COL_DW_OPS = ("DepthwiseConv", "FusedDepthwiseConv")
+
+
+def im2col_scratch_bytes(graph, *, batch: int = 1,
+                         act_bytes: int = 1) -> Dict[str, int]:
+    """Patch-tensor bytes each conv's im2col lowering materializes.
+
+    The im2col+qgemm path rewrites every windowed conv into a
+    ``(B*OH*OW, KH*KW*Cin)`` patch matrix before the matmul — scratch
+    traffic no other byte model in the repo sees (HLO ``cost_analysis``
+    never compiles the interpreter as one program, and the FIFO model only
+    sizes inter-actor streams).  Depthwise convs are the pathological case:
+    the dense block-diagonal weight expansion keeps the patch row at
+    ``KH*KW*C`` even though each output channel reads ``KH*KW`` taps, so
+    bytes blow up ~``KH*KW``-fold with no reuse — the direct ``qconv_dw``
+    kernel reads the padded activation in place and drops this term to
+    zero.
+
+    ``act_bytes`` is the element width of the materialized patches (1 for
+    the int8-code hot path, 4 for the f32 fake-quant path).  Returns
+    per-node bytes keyed by node name plus a ``"_total"`` sum; the graph's
+    ``value_info`` must be populated (run ``infer_shapes`` first).
+    """
+    out: Dict[str, int] = {}
+    total = 0
+    for n in graph.topo_order():
+        dw = n.op in _IM2COL_DW_OPS
+        if not dw and n.op not in _IM2COL_OPS:
+            continue
+        w = graph.initializers[n.inputs[1]]
+        ks = n.attrs.get("kernel_shape") or w.shape[:2]
+        kh, kw = int(ks[0]), int(ks[1])
+        oshape = graph.value_info[n.outputs[0]].shape
+        oh, ow = int(oshape[1]), int(oshape[2])
+        # HWIO: regular conv reduces over w[2]=Cin; depthwise has w[2]==1
+        # but its dense im2col expansion still spans all C=w[3] channels
+        cin = int(w.shape[3] if dw else w.shape[2])
+        nbytes = batch * oh * ow * kh * kw * cin * act_bytes
+        out[n.name] = nbytes
+        total += nbytes
+    out["_total"] = total
+    return out
 
 
 def model_flops_for(cfg, shape, n_params_active: int) -> float:

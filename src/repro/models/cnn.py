@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.mnist_cnn import CNNConfig
+from repro.configs.separable_cnn import SeparableCNNConfig
 
 
 def init_params(cfg: CNNConfig, key) -> Dict[str, jax.Array]:
@@ -71,6 +72,67 @@ def forward(params: Dict[str, jax.Array], x, cfg: CNNConfig,
         x = jax.nn.relu(x)
     x = x.reshape(x.shape[0], -1)
     return x @ params["fc/w"] + params["fc/b"], aux
+
+
+def depthwise_conv2d(x, w, b, stride: int = 1):
+    """x: (B, H, W, C); w: (kh, kw, 1, C) HWIO — SAME padding, one filter per
+    channel (``feature_group_count == C``)."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1])
+    return y + b
+
+
+def init_separable_params(cfg: SeparableCNNConfig, key) -> Dict[str, jax.Array]:
+    """Conv stem + (depthwise 3x3, pointwise 1x1) separable blocks + FC."""
+    params: Dict[str, jax.Array] = {}
+    k = cfg.kernel_size
+    keys = jax.random.split(key, 2 * len(cfg.blocks) + 2)
+    fan = k * k * cfg.in_channels
+    params["stem/w"] = (jax.random.normal(
+        keys[0], (k, k, cfg.in_channels, cfg.stem_channels))
+        / jnp.sqrt(fan)).astype(jnp.float32)
+    params["stem/b"] = jnp.zeros((cfg.stem_channels,), jnp.float32)
+    cin = cfg.stem_channels
+    for i, (cout, _) in enumerate(cfg.blocks):
+        params[f"dw{i}/w"] = (jax.random.normal(keys[2 * i + 1], (k, k, 1, cin))
+                              / jnp.sqrt(k * k)).astype(jnp.float32)
+        params[f"dw{i}/b"] = jnp.zeros((cin,), jnp.float32)
+        params[f"pw{i}/w"] = (jax.random.normal(keys[2 * i + 2], (1, 1, cin, cout))
+                              / jnp.sqrt(cin)).astype(jnp.float32)
+        params[f"pw{i}/b"] = jnp.zeros((cout,), jnp.float32)
+        for layer in (f"dw{i}", f"pw{i}"):
+            c = cin if layer.startswith("dw") else cout
+            params[f"{layer}_bn/scale"] = jnp.ones((c,), jnp.float32)
+            params[f"{layer}_bn/bias"] = jnp.zeros((c,), jnp.float32)
+            params[f"{layer}_bn/mean"] = jnp.zeros((c,), jnp.float32)
+            params[f"{layer}_bn/var"] = jnp.ones((c,), jnp.float32)
+        cin = cout
+    params["fc/w"] = (jax.random.normal(keys[-1], (cfg.fc_in, cfg.n_classes))
+                      / jnp.sqrt(cfg.fc_in)).astype(jnp.float32)
+    params["fc/b"] = jnp.zeros((cfg.n_classes,), jnp.float32)
+    return params
+
+
+def separable_forward(params: Dict[str, jax.Array], x,
+                      cfg: SeparableCNNConfig):
+    """x: (B, H, W, C) -> logits (B, n_classes) — inference-stats oracle for
+    the separable IR graph (``repro.core.reader.separable_cnn_to_ir``)."""
+    x = conv2d(x, params["stem/w"], params["stem/b"])
+    x = jax.nn.relu(x)
+    x = maxpool(x, cfg.pool)
+    for i, (_, stride) in enumerate(cfg.blocks):
+        x = depthwise_conv2d(x, params[f"dw{i}/w"], params[f"dw{i}/b"], stride)
+        x = batchnorm(x, params[f"dw{i}_bn/scale"], params[f"dw{i}_bn/bias"],
+                      params[f"dw{i}_bn/mean"], params[f"dw{i}_bn/var"])
+        x = jax.nn.relu(x)
+        x = conv2d(x, params[f"pw{i}/w"], params[f"pw{i}/b"])
+        x = batchnorm(x, params[f"pw{i}_bn/scale"], params[f"pw{i}_bn/bias"],
+                      params[f"pw{i}_bn/mean"], params[f"pw{i}_bn/var"])
+        x = jax.nn.relu(x)
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc/w"] + params["fc/b"]
 
 
 def loss_fn(params, x, labels, cfg: CNNConfig) -> Tuple[jax.Array, Dict]:

@@ -112,8 +112,9 @@ class PackedTensor:
 
     codes: jax.Array     # int8, original weight shape
     scale: jax.Array     # f32, per-output-channel (last dim), keepdims
-    _packed: Dict[int, jax.Array] = field(default_factory=dict, repr=False,
-                                          compare=False)
+    # cache key: (bits, K-alignment) — one resident buffer per view
+    _packed: Dict[tuple, jax.Array] = field(default_factory=dict, repr=False,
+                                            compare=False)
 
     def view(self, bits: int) -> jax.Array:
         """The ``bits``-bit nested-truncation view of the master codes."""
@@ -133,27 +134,30 @@ class PackedTensor:
     def scale_1d(self) -> jax.Array:
         return self.scale.reshape(-1)
 
-    def packed_view(self, bits: int) -> jax.Array:
+    def packed_view(self, bits: int, align: int = PACK_ALIGN) -> jax.Array:
         """Split-row sub-byte packed W4/W2 buffer (cached; K padded to
-        :data:`PACK_ALIGN` so kernels stream it without a repack)."""
+        ``align`` so kernels stream it without a repack).  The default
+        alignment matches the qmatmul tile; the depthwise-direct kernels pass
+        a small alignment so a 3x3 window (K = 9) is not padded 14x."""
         if bits not in SUB_BYTE_BITS:
             raise ValueError(f"packed_view is for bits in {SUB_BYTE_BITS}, "
                              f"got {bits} (the W8 view IS the master codes)")
-        if bits not in self._packed:
-            self._packed[bits] = pack_rows(self.codes_2d(), bits)
-        return self._packed[bits]
+        key = (bits, int(align))
+        if key not in self._packed:
+            self._packed[key] = pack_rows(self.codes_2d(), bits, align=align)
+        return self._packed[key]
 
     @property
     def nbytes(self) -> int:
         """Master storage: 1 byte/code + 4 bytes/scale (shared by all points)."""
         return int(self.codes.size) + 4 * int(self.scale.size)
 
-    def view_nbytes(self, bits: int) -> int:
+    def view_nbytes(self, bits: int, align: int = PACK_ALIGN) -> int:
         """Resident HBM bytes of the ``bits``-bit view on the kernel path:
-        the streamed weight buffer (K padded to :data:`PACK_ALIGN`, sub-byte
-        packed below W8) plus the f32 channel scales."""
+        the streamed weight buffer (K padded to ``align``, sub-byte packed
+        below W8) plus the f32 channel scales."""
         k, n = self.codes_2d().shape
-        kp = k + ((-k) % PACK_ALIGN)
+        kp = k + ((-k) % align)
         if bits in SUB_BYTE_BITS:
             buf = (kp // (8 // bits)) * n
         else:

@@ -512,7 +512,10 @@ def test_autotune_cache_persists_across_processes(tmp_path, monkeypatch):
     import json
     qops._BLOCK_CACHE.clear()
     pick_blocks(512, 512, 512, 8, interpret=True)
-    assert len(json.loads(path.read_text())) == 1
+    doc = json.loads(path.read_text())
+    from repro.kernels.autotune import CACHE_SCHEMA
+    assert doc["schema"] == CACHE_SCHEMA
+    assert len(doc["entries"]) == 1
 
 
 def test_autotune_cache_disable_and_corrupt(tmp_path, monkeypatch):

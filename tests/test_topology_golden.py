@@ -17,14 +17,17 @@ import numpy as np
 import pytest
 
 from repro.configs.mnist_cnn import CONFIG as CNN
+from repro.configs.separable_cnn import CONFIG as SEP
 from repro.core.flow import DesignFlow
 from repro.core.ir import Graph, Node, TensorInfo
-from repro.core.reader import cnn_to_ir
+from repro.core.reader import cnn_to_ir, separable_cnn_to_ir
 from repro.core.writers.stream_writer import StreamWriter
 from repro.models import cnn
 from repro.quant.qtypes import DatatypeConfig
 
 GOLDEN = pathlib.Path(__file__).parent / "golden" / "mnist_cnn_topology.json"
+SEP_GOLDEN = (pathlib.Path(__file__).parent / "golden"
+              / "separable_cnn_topology.json")
 
 
 def canonical_topology(fifo_slack: float = 1.0):
@@ -38,16 +41,36 @@ def canonical_topology(fifo_slack: float = 1.0):
     return res.writers["stream"].topology()
 
 
-def test_topology_matches_golden_file():
-    topo = json.loads(json.dumps(canonical_topology()))  # normalize tuples
+def canonical_separable_topology():
+    """The depthwise-separable reference: seed-pinned separable CNN at the
+    fully-integer D8-W8 point, default compile pipeline (DW+BN+Relu fusion
+    and the stem's Relu->MaxPool reorder both fire)."""
+    params = cnn.init_separable_params(SEP, jax.random.PRNGKey(0))
+    g = separable_cnn_to_ir(
+        SEP, {k: np.asarray(v) for k, v in params.items()})
+    res = DesignFlow(g).run(targets=("stream",),
+                            dtconfig=DatatypeConfig(8, 8))
+    return res.writers["stream"].topology()
+
+
+def _check_golden(topo, path):
+    topo = json.loads(json.dumps(topo))            # normalize tuples
     if os.environ.get("GOLDEN_REGEN"):
-        GOLDEN.parent.mkdir(exist_ok=True)
-        GOLDEN.write_text(json.dumps(topo, indent=1) + "\n")
-    assert GOLDEN.exists(), "golden file missing — run with GOLDEN_REGEN=1"
-    want = json.loads(GOLDEN.read_text())
+        path.parent.mkdir(exist_ok=True)
+        path.write_text(json.dumps(topo, indent=1) + "\n")
+    assert path.exists(), "golden file missing — run with GOLDEN_REGEN=1"
+    want = json.loads(path.read_text())
     assert topo == want, (
-        "topology drifted from tests/golden/mnist_cnn_topology.json; if the "
-        "change is intentional, regenerate with GOLDEN_REGEN=1")
+        f"topology drifted from {path.name}; if the change is intentional, "
+        f"regenerate with GOLDEN_REGEN=1")
+
+
+def test_topology_matches_golden_file():
+    _check_golden(canonical_topology(), GOLDEN)
+
+
+def test_separable_topology_matches_golden_file():
+    _check_golden(canonical_separable_topology(), SEP_GOLDEN)
 
 
 def test_every_fifo_has_positive_integer_depth():
@@ -71,6 +94,32 @@ def test_fifo_depths_follow_value_info_models():
     assert by_dst["pool0"]["depth"] == 1 * 28 * 16 + 2 * 16
     # the classifier needs the whole flattened per-item vector resident
     assert by_dst["fc"]["depth"] == CNN.fc_in
+
+
+def test_grouped_fifo_depths_follow_line_buffer_model():
+    """Depthwise consumers share the Conv line-buffer firing rule — the NHWC
+    stream buffers every channel of a pixel regardless of grouping."""
+    topo = canonical_separable_topology()
+    by_dst = {c["dst"]: c for c in topo["connections"]}
+    # dw0 reads the pooled (N, 14, 14, 8) stream with a 3x3 window
+    assert by_dst["dw0"]["depth"] == 2 * 14 * 8 + 3 * 8
+    # dw1 reads pw0's (N, 14, 14, 16) stream (its own stride-2 does not
+    # change what must be buffered before the first firing)
+    assert by_dst["dw1"]["depth"] == 2 * 14 * 16 + 3 * 16
+    # the reorder pass moved the stem pool onto the conv stream: the pool
+    # buffers a window of the full-rate tensor, the relu one pixel of the
+    # pooled one
+    assert by_dst["stem_pool"]["tensor"] == "stem_out"
+    assert by_dst["stem_pool"]["depth"] == 1 * 28 * 8 + 2 * 8
+    assert by_dst["stem_relu"]["depth"] == 8
+    actors = {a["name"]: a for a in topo["actors"]}
+    for dw in ("dw0", "dw1"):
+        assert actors[dw]["class"] == "FusedDepthwiseConv"
+        assert actors[dw]["target"] == "pallas/qconv_dw"
+        assert actors[dw]["sub_actors"] == [
+            "LineBuffer", "DepthwiseActor", "WeightActor", "BiasActor",
+            "ReluActor"]
+        assert actors[dw]["weight_shape"][2] == 1      # HWIO depthwise
 
 
 def test_fifo_slack_scales_depths():
