@@ -9,4 +9,11 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS=cpu
-exec python -m pytest -x -q ${TIER1_ARGS:-} "$@"
+# A deadlocked pump thread must fail the run, not hang it: apply a per-test
+# wall clock whenever the pytest-timeout plugin is available (CI installs it
+# via requirements-dev.txt; environments without it just run unbounded).
+TIMEOUT_ARGS=""
+if python -c "import pytest_timeout" 2>/dev/null; then
+  TIMEOUT_ARGS="--timeout=300 --timeout-method=thread"
+fi
+exec python -m pytest -x -q ${TIMEOUT_ARGS} ${TIER1_ARGS:-} "$@"

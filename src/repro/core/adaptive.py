@@ -20,8 +20,9 @@ realization (DESIGN.md §2):
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, Deque, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -149,3 +150,95 @@ class RuntimePolicy:
             if energy_budget_frac > th:
                 return pt
         return self.points[-1]
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop precision control against a latency SLO
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServiceObjective:
+    """A tenant's latency contract plus the control-loop tuning knobs.
+
+    ``p95_latency_s`` is the target the controller defends.  ``window`` /
+    ``min_samples`` size the observation window a decision needs;
+    ``hold`` is the minimum number of observations between two precision
+    shifts (hysteresis — it bounds oscillation and upshift-probe rate);
+    ``recover_margin`` is the headroom fraction under which the controller
+    tries the next-higher-precision point again (p95 below
+    ``recover_margin * p95_latency_s`` == "there is headroom").
+    """
+    p95_latency_s: float
+    window: int = 64
+    min_samples: int = 8
+    hold: int = 16
+    recover_margin: float = 0.5
+
+    def __post_init__(self):
+        if self.p95_latency_s <= 0:
+            raise ValueError("p95_latency_s must be > 0")
+        if not 0.0 < self.recover_margin < 1.0:
+            raise ValueError("recover_margin must be in (0, 1)")
+
+
+class SLOController:
+    """Feedback controller: measured request latency -> precision ladder.
+
+    The paper's runtime adaptivity story closed with a real signal: instead
+    of an open-loop energy-budget heuristic, the serving layer feeds every
+    completed request's latency back in, and the controller walks the
+    working-point ladder (ordered highest precision first, e.g. W8/W4/W2) —
+    *down* a step when the windowed p95 violates the SLO (lower-bit views
+    stream fewer weight bytes, so they are the faster/cheaper points), back
+    *up* when p95 shows ``recover_margin`` headroom.  Shifting clears the
+    window so the next decision is made from observations of the new point
+    only, and ``hold`` observations must accumulate before any further
+    shift.
+    """
+
+    def __init__(self, points: Sequence[WorkingPoint], slo: ServiceObjective):
+        if not points:
+            raise ValueError("SLOController needs at least one working point")
+        self.points = list(points)
+        self.slo = slo
+        self.idx = 0                      # start at the highest precision
+        self.shifts: List[Tuple[str, str]] = []   # (from, to) telemetry
+        self._window: Deque[float] = deque(maxlen=slo.window)
+        self._since_shift = 0
+
+    def select(self) -> WorkingPoint:
+        return self.points[self.idx]
+
+    @property
+    def p95(self) -> float:
+        from repro.runtime.scheduler import percentile
+        return percentile(self._window, 0.95)
+
+    def observe(self, latency_s: float) -> None:
+        """Feed one completed request's end-to-end latency."""
+        self._window.append(latency_s)
+        self._since_shift += 1
+        if (len(self._window) < self.slo.min_samples
+                or self._since_shift < self.slo.hold):
+            return
+        p95 = self.p95
+        if p95 > self.slo.p95_latency_s and self.idx < len(self.points) - 1:
+            self._shift(self.idx + 1)
+        elif (p95 < self.slo.recover_margin * self.slo.p95_latency_s
+                and self.idx > 0):
+            self._shift(self.idx - 1)
+
+    def _shift(self, new_idx: int) -> None:
+        self.shifts.append((self.points[self.idx].name,
+                            self.points[new_idx].name))
+        self.idx = new_idx
+        self._since_shift = 0
+        self._window.clear()
+
+    def telemetry(self) -> Dict:
+        return {
+            "point": self.points[self.idx].name,
+            "p95_slo_s": self.slo.p95_latency_s,
+            "window_p95_s": (self.p95 if self._window else None),
+            "shifts": list(self.shifts),
+        }

@@ -11,8 +11,9 @@ bit-identical to a never-failed run (tested in tests/test_ft.py).
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -43,14 +44,18 @@ class StragglerWatchdog:
     logic is what's under test — the actuation is cluster-specific)."""
     factor: float = 3.0
     window: int = 20
-    times: List[float] = field(default_factory=list)
+    times: Deque[float] = field(default_factory=deque)
     flagged: List[int] = field(default_factory=list)
+
+    def __post_init__(self):
+        # only the last ``window`` samples ever feed the median: bound the
+        # buffer so a long run does not grow host memory without limit
+        self.times = deque(self.times, maxlen=self.window)
 
     def observe(self, step: int, dt: float) -> bool:
         self.times.append(dt)
-        hist = self.times[-self.window:]
-        med = float(np.median(hist))
-        slow = len(hist) >= 5 and dt > self.factor * med
+        med = float(np.median(self.times))
+        slow = len(self.times) >= 5 and dt > self.factor * med
         if slow:
             self.flagged.append(step)
         return slow

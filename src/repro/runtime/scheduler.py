@@ -14,9 +14,12 @@ Three cooperating pieces:
   flush.  The clock is injected so tests drive time deterministically.
 * :class:`BucketPolicy` — maps a packed size to the leading-dim size actually
   executed.  Candidate sizes come from a bucket ladder (powers of two up to
-  ``max_batch`` by default) so the jit cache stays small, but a size already
-  resident in the executable's LRU is preferred whenever it pads no worse
-  than the ladder bucket — tracing is far more expensive than padding.
+  ``max_batch`` by default) so the jit cache stays small.  With a
+  :class:`LatencyEWMA` attached the choice is *measured*: among candidates
+  with latency observations, the lowest-EWMA bucket wins; the static
+  pads-no-worse-than-ladder heuristic survives only as the cold-start
+  fallback (and as the explorer — an unmeasured heuristic choice executes
+  once so it gains an estimate).
 * :class:`ScheduledBatch` — the unit handed to the executor: member requests
   in arrival order, the bucket to pad to, and the batch budget (the most
   constrained member, so the precision policy never over-serves a request).
@@ -105,6 +108,40 @@ class ScheduledBatch:
         return min(r.budget for r in self.requests)
 
 
+class LatencyEWMA:
+    """Per-bucket execution-latency EWMA — the measurement side of the
+    closed bucket-selection loop.
+
+    The executor observes how long each bucket actually takes on the device
+    (:class:`~repro.runtime.serve.BatchReport.exec_s`); the policy consults
+    the estimates when choosing the next bucket.  An exponentially weighted
+    moving average keeps the estimate fresh under drift (retraces, cache
+    evictions, thermal/clock changes) without storing a window per bucket.
+    """
+
+    def __init__(self, alpha: float = 0.25):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self._est: dict = {}
+        self._count: dict = {}
+
+    def observe(self, bucket: int, seconds: float) -> None:
+        prev = self._est.get(bucket)
+        self._est[bucket] = (
+            seconds if prev is None else (1 - self.alpha) * prev + self.alpha * seconds
+        )
+        self._count[bucket] = self._count.get(bucket, 0) + 1
+
+    def estimate(self, bucket: int) -> Optional[float]:
+        """EWMA execution seconds for ``bucket``, or None if never measured."""
+        return self._est.get(bucket)
+
+    def snapshot(self) -> dict:
+        """{bucket: ewma_seconds} for telemetry."""
+        return dict(self._est)
+
+
 def _pow2_ladder(max_batch: int) -> Tuple[int, ...]:
     out = []
     b = 1
@@ -119,11 +156,16 @@ class BucketPolicy:
     """Choose the executed leading-dim size for a packed request group.
 
     ``buckets`` is the ladder of sizes worth owning a trace for (default:
-    powers of two capped at ``max_batch``).  ``bucket_for`` returns the
-    smallest ladder bucket that fits — unless the executable's LRU already
-    holds a traced size that fits with no more padding than that ladder
-    bucket, in which case the cached size wins (a cache hit costs a few
-    padded rows; a miss costs a fresh trace and may evict a hot one).
+    powers of two capped at ``max_batch``).  When ``latency`` (a
+    :class:`LatencyEWMA` fed by the executor) holds measurements, the choice
+    is closed-loop: among every fitting candidate (ladder plus LRU-resident
+    sizes) with an estimate, the lowest measured execution latency wins.
+    The static rule — smallest fitting ladder bucket, preferring an
+    LRU-resident size that pads no worse (a cache hit costs a few padded
+    rows; a miss costs a fresh trace and may evict a hot one) — is demoted
+    to the cold-start fallback: it picks the bucket only while that bucket
+    has no measurement yet, which is exactly what routes one execution
+    through it and gives the loop its estimate.
 
     ``packing`` selects how many queued requests a batch takes: ``"fifo"``
     (default) packs the maximal arrival-order prefix fitting ``max_batch``;
@@ -140,6 +182,7 @@ class BucketPolicy:
         buckets: Optional[Sequence[int]] = None,
         max_batch: int = 8,
         packing: str = "fifo",
+        latency: Optional[LatencyEWMA] = None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -147,6 +190,7 @@ class BucketPolicy:
             raise ValueError(f"packing must be one of {self.PACKINGS}, got {packing!r}")
         self.max_batch = max_batch
         self.packing = packing
+        self.latency = latency
         ladder = tuple(sorted(set(buckets))) if buckets else _pow2_ladder(max_batch)
         if any(b < 1 for b in ladder):
             raise ValueError(f"buckets must be positive, got {ladder}")
@@ -165,13 +209,33 @@ class BucketPolicy:
                 return b
         return size  # size exceeds the ladder: execute at exact size
 
-    def bucket_for(self, size: int, cached: Collection[int] = ()) -> int:
-        """Executed size for a packed total of ``size`` rows, preferring
-        already-traced sizes in ``cached`` that pad no worse than the
-        ladder."""
+    def fallback_bucket(self, size: int, cached: Collection[int] = ()) -> int:
+        """The static heuristic: smallest fitting ladder bucket, preferring
+        an already-traced size in ``cached`` that pads no worse."""
         ladder = self.ladder_bucket(size)
         fits = [c for c in cached if size <= c <= ladder]
         return min(fits) if fits else ladder
+
+    def bucket_for(self, size: int, cached: Collection[int] = ()) -> int:
+        """Executed size for a packed total of ``size`` rows.
+
+        Measured mode (``latency`` attached and warm): the fitting candidate
+        with the lowest latency EWMA, ties to the smaller bucket.  Cold
+        start — no latency model, or the heuristic's own choice is still
+        unmeasured — falls back to :meth:`fallback_bucket`; executing that
+        choice is what produces its first measurement, so every bucket the
+        heuristic would ever pick gets measured before being argued with.
+        """
+        fallback = self.fallback_bucket(size, cached)
+        lat = self.latency
+        if lat is None or lat.estimate(fallback) is None:
+            return fallback
+        measured = [
+            (est, b)
+            for b in {*self.buckets, *cached}
+            if b >= size and (est := lat.estimate(b)) is not None
+        ]
+        return min(measured)[1]
 
     def best_fit_take(
         self, sizes: Sequence[int], cached: Collection[int] = ()
@@ -214,10 +278,11 @@ class CoalescingScheduler:
         clock: Callable[[], float] = time.monotonic,
         signature: Optional[RequestSignature] = None,
         packing: str = "fifo",
+        latency: Optional[LatencyEWMA] = None,
     ):
         if queue_depth < 1:
             raise ValueError("queue_depth must be >= 1")
-        self.policy = BucketPolicy(buckets, max_batch, packing=packing)
+        self.policy = BucketPolicy(buckets, max_batch, packing=packing, latency=latency)
         self.max_batch = max_batch
         self.max_wait = max_wait
         self.queue_depth = queue_depth
@@ -344,6 +409,14 @@ class CoalescingScheduler:
             if batch is None:
                 return
             yield batch
+
+    def abandon(self) -> List[Request]:
+        """Empty the queue without executing, returning the popped requests
+        so the caller (server shutdown / pump death) can resolve their
+        tickets with an error instead of leaving them queued forever."""
+        popped = list(self._queue)
+        self._queue.clear()
+        return popped
 
     def stats(self) -> dict:
         rows = self.scheduled_rows + self.padded_rows

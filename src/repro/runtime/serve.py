@@ -13,11 +13,12 @@ point per scheduled batch.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import Counter, deque
 from dataclasses import dataclass
 from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
-                    Tuple)
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -25,19 +26,20 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.adaptive import RuntimePolicy, WorkingPoint
+from repro.core.adaptive import (RuntimePolicy, ServiceObjective,
+                                 SLOController, WorkingPoint)
 from repro.models import encdec, transformer
 from repro.quant.ptq import QuantizedParams, dequantize_tree, quantize_tree_native
 from repro.runtime import model_api
-from repro.runtime.scheduler import (CoalescingScheduler, QueueFull,
-                                     RequestSignature, ScheduledBatch,
-                                     percentile)
+from repro.runtime.scheduler import (CoalescingScheduler, LatencyEWMA,
+                                     QueueFull, RequestSignature,
+                                     ScheduledBatch, percentile)
 from repro.sharding import batch_axes
 
 __all__ = [
     "AccelServer", "AdaptiveLMServer", "BatchReport", "QueueFull",
-    "ServeMetrics", "decode_state_shardings", "greedy_generate",
-    "make_decode_step", "make_prefill_step",
+    "ServeMetrics", "ServiceObjective", "Ticket", "decode_state_shardings",
+    "greedy_generate", "make_decode_step", "make_prefill_step",
 ]
 
 
@@ -96,17 +98,24 @@ def make_decode_step(cfg: ModelConfig, *, mesh: Optional[Mesh] = None,
 
 def greedy_generate(params, cfg: ModelConfig, prompt, max_new: int,
                     seq_len: int, batch_extras: Optional[Dict] = None):
-    """Host-loop greedy decoding (examples / integration tests)."""
+    """Host-loop greedy decoding (examples / integration tests).
+
+    Always returns ``max_new`` generated tokens after the prompt.  A
+    zero-length prompt is legal: with nothing to condition on, generation is
+    seeded with token 0 (BOS convention) and that seed counts as the first
+    generated token."""
     B, S0 = prompt.shape
     batch = {"tokens": prompt, **(batch_extras or {})}
     state = model_api.init_decode_state(params, batch, cfg, B, seq_len)
     step = jax.jit(lambda p, t, s: model_api.decode_step(p, t, s, cfg))
-    # feed the prompt token by token (cache warmup), then generate
     out = [prompt]
-    tok = prompt[:, :1]
-    for i in range(S0):
-        logits, state = step(params, prompt[:, i:i + 1], state)
-    tok = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1)
+    if S0:
+        # feed the prompt token by token (cache warmup), then generate
+        for i in range(S0):
+            logits, state = step(params, prompt[:, i:i + 1], state)
+        tok = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1)
+    else:
+        tok = jnp.zeros((B, 1), prompt.dtype)
     for _ in range(max_new):
         out.append(tok)
         logits, state = step(params, tok, state)
@@ -171,7 +180,7 @@ class AdaptiveLMServer:
 
 
 # ---------------------------------------------------------------------------
-# Batch-coalescing accelerator server (continuous batching over the flow)
+# Batch-coalescing accelerator server (async, multi-tenant)
 # ---------------------------------------------------------------------------
 
 @dataclass
@@ -190,28 +199,165 @@ class BatchReport:
     requests: int        # member request count
     point: Optional[str]  # precision working point, if a policy is attached
     bits: Optional[int] = None   # weight-bits view the executed artifact used
+    tenant: str = "default"      # which resident graph served the batch
+    exec_s: Optional[float] = None  # device execution seconds (feeds LatencyEWMA)
+
+
+class Ticket:
+    """Future-style handle for one submitted request.
+
+    ``submit`` returns immediately; the ticket resolves when the pump (the
+    background thread, or a synchronous ``pump()`` call) executes the batch
+    the request coalesced into.  ``result()`` blocks until then (optionally
+    bounded by ``timeout`` when the background pump is running) and raises
+    the batch's error if execution failed.  Results are single-consumption;
+    an abandoned ticket is released with :meth:`AccelServer.drop`.
+    """
+
+    __slots__ = ("tenant", "rid", "_server", "_event")
+
+    def __init__(self, server: "AccelServer", tenant: str, rid: int):
+        self.tenant = tenant
+        self.rid = rid
+        self._server = server
+        self._event = threading.Event()
+
+    def done(self) -> bool:
+        """True once the request resolved (result or error ready)."""
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        return self._server.result(self, timeout=timeout)
+
+    def __repr__(self) -> str:
+        state = "done" if self.done() else "pending"
+        return f"Ticket(tenant={self.tenant!r}, rid={self.rid}, {state})"
+
+
+@dataclass
+class _Pending:
+    """A dispatched-but-unforced batch: the device may still be executing
+    while the pump assembles and dispatches the next one (host batch assembly
+    overlapping device execution)."""
+    tenant: "_Tenant"
+    batch: ScheduledBatch
+    outs: tuple
+    multi: bool
+    point: Optional[str]
+    bits: Optional[int]
+    t0: float
+
+
+class _Tenant:
+    """One resident graph: scheduler, executables, QoS class, SLO loop."""
+
+    def __init__(self, name: str, executable: Callable, *,
+                 max_batch: int = 8, max_wait: float = 0.005,
+                 queue_depth: int = 1024,
+                 buckets: Optional[Sequence[int]] = None,
+                 policy: Optional[RuntimePolicy] = None,
+                 point_executables: Optional[Dict[str, Callable]] = None,
+                 signature: Optional[RequestSignature] = None,
+                 packing: str = "fifo", weight: int = 1,
+                 slo: Optional[ServiceObjective] = None,
+                 latency: Optional[LatencyEWMA] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 history: int = 4096):
+        if weight < 1:
+            raise ValueError(f"tenant weight must be >= 1, got {weight}")
+        self.name = name
+        self.executable = executable
+        self.point_executables: Dict[str, Callable] = dict(point_executables or {})
+        self.policy = policy
+        self.weight = int(weight)
+        # the measurement side of the closed bucket loop: the executor feeds
+        # per-bucket execution seconds in, the BucketPolicy reads them back
+        self.latency = latency if latency is not None else LatencyEWMA()
+        self.scheduler = CoalescingScheduler(
+            max_batch=max_batch, max_wait=max_wait, queue_depth=queue_depth,
+            buckets=buckets, clock=clock, signature=signature,
+            packing=packing, latency=self.latency)
+        self.controller: Optional[SLOController] = None
+        if slo is not None:
+            if policy is None:
+                raise ValueError(
+                    "an SLO tenant needs a RuntimePolicy: its working points "
+                    "are the precision ladder the controller walks")
+            self.controller = SLOController(policy.points, slo)
+        # per-ticket state (guarded by the server lock)
+        self.results: Dict[int, Any] = {}
+        self.dropped: set = set()
+        self.split: Dict[int, List[int]] = {}
+        self.child_parent: Dict[int, int] = {}
+        self.parent_left: Dict[int, int] = {}
+        self.tickets: Dict[int, Ticket] = {}
+        # bounded telemetry windows: a long-running server keeps the last
+        # ``history`` entries (the scheduler's totals stay cumulative)
+        self.reports: Deque[BatchReport] = deque(maxlen=history)
+        self.latencies: Deque[float] = deque(maxlen=history)
+        self.executed_batches = 0
+
+    def executables(self) -> List[Callable]:
+        uniq, seen = [], set()
+        for exe in (self.executable, *self.point_executables.values()):
+            if id(exe) not in seen:
+                seen.add(id(exe))
+                uniq.append(exe)
+        return uniq
+
+    def cached(self) -> Tuple[int, ...]:
+        """Union of traced leading-dim sizes across the default and every
+        per-point executable (the bucket is chosen before the point is)."""
+        sizes = set()
+        for exe in self.executables():
+            sizes.update(getattr(exe, "cached_batches", ()))
+        return tuple(sorted(sizes))
 
 
 class AccelServer:
-    """Batch-coalescing serving front-end over a batch-polymorphic artifact.
+    """Async, multi-tenant batch-coalescing serving front-end.
 
-    Wires a :class:`~repro.runtime.scheduler.CoalescingScheduler` (bounded
-    queue, FIFO packing up to ``max_batch``, ``max_wait`` flush, bucket
-    selection against the executable's LRU) to a
-    :class:`~repro.core.writers.jax_writer.BatchedExecutable` (or any
-    callable, e.g. ``DistWriter.build_batched(mesh)`` for the SPMD path).
-    Member inputs are concatenated along the leading dim, zero-padded up to
-    the chosen bucket, executed once, and the outputs sliced back
-    per request — coalescing is invisible to callers.
+    Several resident graphs (*tenants*) are multiplexed onto one device.
+    Each tenant owns a :class:`~repro.runtime.scheduler.CoalescingScheduler`
+    (bounded queue — per-tenant :class:`QueueFull` admission control — FIFO
+    packing, ``max_wait`` flush, measured-latency bucket selection) over a
+    batch-polymorphic executable (plus optional per-precision-point
+    executables sharing one weight substrate).  Member inputs are
+    concatenated along the leading dim, zero-padded to the chosen bucket,
+    executed once, and the outputs sliced back per request — coalescing is
+    invisible to callers.
 
-    When a :class:`~repro.core.adaptive.RuntimePolicy` is attached, every
-    scheduled batch selects a precision working point from the batch budget
-    (the most constrained member); ``point_executables`` maps point names to
-    per-point executables sharing one weight substrate (the paper's
-    no-weight-reload precision switch).
+    Two drive modes:
+
+    * **Synchronous** (default, fully deterministic under an injected
+      clock): the caller drives :meth:`pump`, exactly the pre-async
+      behaviour.
+    * **Background pump** (:meth:`start` / :meth:`stop`): ``submit`` returns
+      a :class:`Ticket` immediately and a pump thread assembles and
+      dispatches batches, keeping up to ``pipeline_depth`` batches dispatched
+      but unforced so host batch assembly overlaps device execution.
+      Tenants share the device via weighted round-robin (``weight`` = QoS
+      class: how many batches a tenant may dispatch per cycle while
+      backlogged).  ``stop()`` drains every queue before the thread exits; a
+      batch failure resolves its member tickets to per-ticket errors and the
+      pump keeps serving; an unexpected pump crash resolves *every*
+      outstanding and queued ticket with the error so no caller blocks
+      forever.
+
+    Two control loops close over measured latency:
+
+    * per-bucket execution time feeds each tenant's
+      :class:`~repro.runtime.scheduler.LatencyEWMA`, which the
+      :class:`~repro.runtime.scheduler.BucketPolicy` consults — the static
+      pads-no-worse heuristic is only the cold-start fallback;
+    * end-to-end request latency feeds the tenant's
+      :class:`~repro.core.adaptive.SLOController` (when an ``slo`` is set),
+      which walks the precision ladder W8 -> W4 -> W2 down under p95
+      pressure and back up when there is headroom — the paper's
+      no-weight-reload precision switch, driven by a real signal.
     """
 
-    def __init__(self, executable: Callable, *,
+    def __init__(self, executable: Optional[Callable] = None, *,
                  max_batch: int = 8, max_wait: float = 0.005,
                  queue_depth: int = 1024,
                  buckets: Optional[Sequence[int]] = None,
@@ -220,65 +366,176 @@ class AccelServer:
                  clock: Callable[[], float] = time.monotonic,
                  history: int = 4096,
                  signature: Optional[RequestSignature] = None,
-                 packing: str = "fifo"):
-        self.executable = executable
-        self.scheduler = CoalescingScheduler(
-            max_batch=max_batch, max_wait=max_wait, queue_depth=queue_depth,
-            buckets=buckets, clock=clock, signature=signature,
-            packing=packing)
-        self.policy = policy
-        self.point_executables = dict(point_executables or {})
+                 packing: str = "fifo",
+                 weight: int = 1,
+                 slo: Optional[ServiceObjective] = None,
+                 latency: Optional[LatencyEWMA] = None,
+                 pipeline_depth: int = 2):
         self.clock = clock
-        self._results: Dict[int, Any] = {}
-        self._dropped: set = set()
-        # oversize submissions: parent ticket -> ordered chunk tickets (the
-        # scheduler split them; result() concatenates the chunk outputs)
-        self._split: Dict[int, List[int]] = {}
-        # bounded telemetry windows: a long-running server keeps the last
-        # ``history`` entries, not one record per request forever (the
-        # scheduler's totals stay cumulative)
-        self.reports: Deque[BatchReport] = deque(maxlen=history)
-        self.latencies: Deque[float] = deque(maxlen=history)
-        self.executed_batches = 0
+        self.pipeline_depth = max(0, int(pipeline_depth))
+        self.tenants: Dict[str, _Tenant] = {}
+        self._order: List[str] = []          # WRR ring, registration order
+        self._rr_pos = 0
+        self._rr_credit = 0
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._stopping = False
+        self._drain_on_stop = True
+        self._fatal: Optional[BaseException] = None
+        # per-batch executable failures survive here in async mode, where no
+        # caller frame exists for pump() to re-raise into
+        self.pump_errors: Deque[BaseException] = deque(maxlen=64)
+        if executable is not None:
+            self.add_tenant("default", executable, max_batch=max_batch,
+                            max_wait=max_wait, queue_depth=queue_depth,
+                            buckets=buckets, policy=policy,
+                            point_executables=point_executables,
+                            signature=signature, packing=packing,
+                            weight=weight, slo=slo, latency=latency,
+                            history=history)
+
+    # -- tenant registry -----------------------------------------------------
+    def add_tenant(self, name: str, executable: Callable, **kwargs) -> str:
+        """Register a resident graph under ``name``; returns the name.
+
+        Keyword arguments mirror the constructor's per-tenant set:
+        ``max_batch``, ``max_wait``, ``queue_depth``, ``buckets``,
+        ``policy``, ``point_executables``, ``signature``, ``packing``,
+        ``weight`` (QoS: batches per WRR cycle while backlogged), ``slo`` (a
+        :class:`~repro.core.adaptive.ServiceObjective` — requires a
+        ``policy`` whose points form the precision ladder), ``latency`` and
+        ``history``."""
+        with self._lock:
+            if name in self.tenants:
+                raise ValueError(f"tenant {name!r} already registered")
+            ten = _Tenant(name, executable, clock=self.clock, **kwargs)
+            self.tenants[name] = ten
+            self._order.append(name)
+            if len(self._order) == 1:
+                self._rr_credit = ten.weight
+        return name
+
+    def _tenant(self, name: str) -> _Tenant:
+        try:
+            return self.tenants[name]
+        except KeyError:
+            raise KeyError(f"no tenant {name!r}; have {tuple(self.tenants)}")
+
+    # -- single-tenant compatibility surface ---------------------------------
+    @property
+    def _default(self) -> _Tenant:
+        return self._tenant("default")
+
+    @property
+    def scheduler(self) -> CoalescingScheduler:
+        return self._default.scheduler
+
+    @property
+    def executable(self) -> Callable:
+        return self._default.executable
+
+    @property
+    def point_executables(self) -> Dict[str, Callable]:
+        return self._default.point_executables
+
+    @property
+    def policy(self) -> Optional[RuntimePolicy]:
+        return self._default.policy
+
+    @property
+    def reports(self) -> Deque[BatchReport]:
+        return self._default.reports
+
+    @property
+    def latencies(self) -> Deque[float]:
+        return self._default.latencies
+
+    @property
+    def executed_batches(self) -> int:
+        return self._default.executed_batches
+
+    @property
+    def _results(self) -> Dict[int, Any]:
+        return self._default.results
+
+    @property
+    def _dropped(self) -> set:
+        return self._default.dropped
+
+    @property
+    def _split(self) -> Dict[int, List[int]]:
+        return self._default.split
 
     # -- request lifecycle ---------------------------------------------------
-    def submit(self, *inputs, budget: float = 1.0) -> int:
-        """Enqueue one request; returns the ticket for :meth:`result`.
+    def submit(self, *inputs, budget: float = 1.0,
+               tenant: str = "default") -> Ticket:
+        """Enqueue one request; returns a :class:`Ticket` immediately.
 
-        A request whose leading dim exceeds ``max_batch`` is transparently
+        Raises the tenant's :class:`QueueFull` when its bounded queue is at
+        depth (admission control — other tenants are unaffected).  A request
+        whose leading dim exceeds the tenant's ``max_batch`` is transparently
         split into chunk requests and demuxed back to this one ticket."""
-        req = self.scheduler.submit(inputs, budget=budget)
-        if req.children:
-            self._split[req.rid] = list(req.children)
-        return req.rid
+        with self._cond:
+            if self._fatal is not None:
+                raise RuntimeError(
+                    "server pump died; no new requests accepted"
+                ) from self._fatal
+            ten = self._tenant(tenant)
+            req = ten.scheduler.submit(inputs, budget=budget)
+            tk = Ticket(self, ten.name, req.rid)
+            ten.tickets[req.rid] = tk
+            if req.children:
+                ten.split[req.rid] = list(req.children)
+                ten.parent_left[req.rid] = len(req.children)
+                for c in req.children:
+                    ten.child_parent[c] = req.rid
+            self._cond.notify_all()
+        return tk
 
-    def _executables(self) -> List[Callable]:
-        uniq, seen = [], set()
-        for exe in (self.executable, *self.point_executables.values()):
-            if id(exe) not in seen:
-                seen.add(id(exe))
-                uniq.append(exe)
-        return uniq
+    # -- batch selection (weighted round-robin across tenants) ---------------
+    def _next_batch(self, flush: bool) -> Optional[Tuple[_Tenant, ScheduledBatch]]:
+        """Pop the next due batch under WRR, or None.  Caller holds the lock.
 
-    def _cached(self) -> Tuple[int, ...]:
-        """Union of traced leading-dim sizes across the default and every
-        per-point executable (the bucket is chosen before the point is)."""
-        sizes = set()
-        for exe in self._executables():
-            sizes.update(getattr(exe, "cached_batches", ()))
-        return tuple(sorted(sizes))
+        Each tenant may dispatch up to ``weight`` batches per turn while it
+        has work ready; an idle or exhausted tenant forfeits the rest of its
+        turn, so QoS ratios only bind under contention (work-conserving)."""
+        names = self._order
+        for _ in range(len(names) + 1):
+            if not names:
+                return None
+            ten = self.tenants[names[self._rr_pos % len(names)]]
+            if self._rr_credit > 0:
+                batch = ten.scheduler.ready(ten.cached(), flush=flush)
+                if batch is not None:
+                    self._rr_credit -= 1
+                    return ten, batch
+            self._rr_pos = (self._rr_pos + 1) % len(names)
+            self._rr_credit = self.tenants[names[self._rr_pos]].weight
+        return None
 
-    def _execute(self, batch: ScheduledBatch) -> None:
-        exe, point, pt = self.executable, None, None
-        if self.policy is not None:
-            pt = self.policy.select(batch.budget)
+    # -- execution -----------------------------------------------------------
+    def _select(self, ten: _Tenant, batch: ScheduledBatch
+                ) -> Tuple[Callable, Optional[str], Optional[int]]:
+        exe, point, pt = ten.executable, None, None
+        if ten.controller is not None:
+            # closed loop: the SLO controller's measured-latency choice
+            # overrides the open-loop energy-budget heuristic
+            pt = ten.controller.select()
+        elif ten.policy is not None:
+            pt = ten.policy.select(batch.budget)
+        if pt is not None:
             point = pt.name
-            exe = self.point_executables.get(pt.name, exe)
+            exe = ten.point_executables.get(pt.name, exe)
         # which weight-bits view served this batch: the artifact's own stamp
         # (packed-weight executables carry it), else the selected point's
         bits = getattr(exe, "bits", None)
         if bits is None and pt is not None:
             bits = pt.weight_bits
+        return exe, point, bits
+
+    def _dispatch(self, ten: _Tenant, batch: ScheduledBatch) -> _Pending:
+        exe, point, bits = self._select(ten, batch)
         # batch assembly and demux stay on the host: jnp.concatenate /
         # per-slice demux would XLA-compile a fresh kernel per distinct
         # request-shape combination, which dwarfs the accelerator call on a
@@ -293,109 +550,329 @@ class AccelServer:
                 col[off:off + p.shape[0]] = p
                 off += p.shape[0]
             cols.append(col)
-        try:
-            out = exe(*cols)
-            multi = isinstance(out, tuple)
-            outs = tuple(np.asarray(o) for o in (out if multi else (out,)))
-        except Exception as e:
-            # resolve every member ticket to an error before propagating —
-            # the requests already left the queue, and losing them would
-            # leave their result() callers waiting on tickets that can
-            # never be served
+        t0 = self.clock()
+        out = exe(*cols)
+        multi = isinstance(out, tuple)
+        return _Pending(ten, batch, tuple(out if multi else (out,)), multi,
+                        point, bits, t0)
+
+    def _finish(self, pending: _Pending) -> None:
+        # forcing to numpy blocks on the device; everything after is host
+        outs = tuple(np.asarray(o) for o in pending.outs)
+        done = self.clock()
+        ten, batch = pending.tenant, pending.batch
+        exec_s = done - pending.t0
+        with self._lock:
+            off = 0
             for r in batch.requests:
-                if r.rid in self._dropped:
-                    self._dropped.discard(r.rid)
+                sliced = tuple(o[off:off + r.size] for o in outs)
+                if r.rid in ten.dropped:
+                    ten.dropped.discard(r.rid)   # abandoned pre-execution
                 else:
-                    self._results[r.rid] = _BatchFailure(e)
+                    self._resolve(ten, r.rid,
+                                  sliced if pending.multi else sliced[0])
+                    lat = done - r.arrival
+                    ten.latencies.append(lat)
+                    if ten.controller is not None:
+                        ten.controller.observe(lat)
+                off += r.size
+            # close the bucket loop: this bucket's measured execution time
+            ten.latency.observe(batch.bucket, exec_s)
+            ten.executed_batches += 1
+            ten.reports.append(BatchReport(
+                batch.bucket, batch.size, batch.padding, len(batch.requests),
+                pending.point, pending.bits, ten.name, exec_s))
+
+    def _fail_batch(self, ten: _Tenant, batch: ScheduledBatch,
+                    err: BaseException) -> None:
+        """Resolve every member ticket of a failed batch to its error — the
+        requests already left the queue, and losing them would leave their
+        result() callers waiting on tickets that can never be served."""
+        with self._lock:
+            for r in batch.requests:
+                if r.rid in ten.dropped:
+                    ten.dropped.discard(r.rid)
+                else:
+                    self._resolve(ten, r.rid, _BatchFailure(err))
+
+    def _run_batch(self, ten: _Tenant, batch: ScheduledBatch) -> None:
+        """Synchronous execute: dispatch + force, re-raising on failure
+        (after resolving the member tickets)."""
+        try:
+            self._finish(self._dispatch(ten, batch))
+        except Exception as e:
+            self._fail_batch(ten, batch, e)
             raise
-        off, done = 0, self.clock()
-        for r in batch.requests:
-            sliced = tuple(o[off:off + r.size] for o in outs)
-            if r.rid in self._dropped:
-                self._dropped.discard(r.rid)   # abandoned pre-execution
-            else:
-                self._results[r.rid] = sliced if multi else sliced[0]
-                self.latencies.append(done - r.arrival)
-            off += r.size
-        self.executed_batches += 1
-        self.reports.append(BatchReport(batch.bucket, batch.size,
-                                        batch.padding, len(batch.requests),
-                                        point, bits))
 
+    def _resolve(self, ten: _Tenant, rid: int, value: Any) -> None:
+        """Store a leaf result and fire ticket events.  Caller holds the
+        lock.  A chunk resolution decrements its split parent; the parent's
+        ticket fires when the last chunk lands."""
+        ten.results[rid] = value
+        parent = ten.child_parent.pop(rid, None)
+        if parent is not None:
+            left = ten.parent_left.get(parent, 1) - 1
+            if left > 0:
+                ten.parent_left[parent] = left
+                return
+            ten.parent_left.pop(parent, None)
+            rid = parent
+        tk = ten.tickets.get(rid)
+        if tk is not None:
+            tk._event.set()
+
+    # -- synchronous pump ----------------------------------------------------
     def pump(self, flush: bool = False) -> int:
-        """Execute every batch the scheduler deems ready; ``flush=True``
-        forces out a partial batch (used on stream end / result demand).
-        Returns the number of batches executed."""
+        """Execute every batch the schedulers deem ready (weighted
+        round-robin across tenants); ``flush=True`` forces out partial
+        batches (stream end / result demand).  Returns the number of batches
+        executed.  Only valid while no background pump is running."""
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError(
+                "background pump running: results arrive via result()/"
+                "tickets; stop() the server to drive it synchronously")
         n = 0
-        for batch in self.scheduler.drain(self._cached(), flush=flush):
-            self._execute(batch)
+        while True:
+            with self._lock:
+                nxt = self._next_batch(flush)
+            if nxt is None:
+                return n
+            ten, batch = nxt
+            self._run_batch(ten, batch)
             n += 1
-        return n
 
-    def result(self, ticket: int):
-        """The output rows for ``ticket`` (flushes if still queued).
+    # -- background pump -----------------------------------------------------
+    def start(self) -> "AccelServer":
+        """Spawn the background pump thread; ``submit`` now overlaps host
+        batch assembly with device execution.  Idempotent lifecycle:
+        ``start`` -> ``stop(drain=True)``; usable as a context manager."""
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                raise RuntimeError("pump thread already running")
+            if self._fatal is not None:
+                raise RuntimeError(
+                    "server pump died; create a fresh server") from self._fatal
+            self._stopping = False
+            self._drain_on_stop = True
+            self._thread = threading.Thread(
+                target=self._pump_loop, name="accel-server-pump", daemon=True)
+            self._thread.start()
+        return self
 
+    def stop(self, drain: bool = True, timeout: Optional[float] = None) -> None:
+        """Stop the pump thread.  ``drain=True`` (default) serves everything
+        still queued first; ``drain=False`` abandons the queues, resolving
+        their tickets with an error so no caller blocks forever."""
+        with self._cond:
+            t = self._thread
+            if t is None:
+                return
+            self._stopping = True
+            self._drain_on_stop = drain
+            self._cond.notify_all()
+        t.join(timeout)
+        if t.is_alive():
+            raise RuntimeError("pump thread did not exit within timeout")
+        with self._cond:
+            self._thread = None
+            self._stopping = False
+            if not drain and self._fatal is None:
+                err = RuntimeError("server stopped before serving this request")
+                for ten in self.tenants.values():
+                    for r in ten.scheduler.abandon():
+                        if r.rid in ten.dropped:
+                            ten.dropped.discard(r.rid)
+                        else:
+                            self._resolve(ten, r.rid, _BatchFailure(err))
+
+    def __enter__(self) -> "AccelServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=True)
+
+    def _any_queued(self) -> bool:
+        return any(len(t.scheduler) for t in self.tenants.values())
+
+    def _poll_s(self) -> float:
+        waits = [t.scheduler.max_wait for t in self.tenants.values()]
+        w = min(waits) if waits else 0.005
+        return min(max(w / 2, 1e-4), 0.05)
+
+    def _pump_loop(self) -> None:
+        try:
+            while True:
+                with self._cond:
+                    while not self._stopping and not self._any_queued():
+                        self._cond.wait(timeout=self._poll_s())
+                    if self._stopping and (not self._drain_on_stop
+                                           or not self._any_queued()):
+                        return
+                    flush = self._stopping
+                executed = self._pump_async(flush)
+                if not executed and not self._stopping:
+                    # work is queued but not yet due (max_wait still
+                    # running): nap instead of spinning
+                    with self._cond:
+                        self._cond.wait(timeout=self._poll_s())
+        except BaseException as e:   # noqa: BLE001 — the pump must not die silently
+            self._die(e)
+
+    def _pump_async(self, flush: bool) -> int:
+        """One pass over the due batches, pipelined: up to
+        ``pipeline_depth`` batches stay dispatched-but-unforced, so the host
+        assembles batch k+1 while the device executes batch k.  A batch
+        failure resolves its member tickets and the pump keeps serving."""
+        inflight: Deque[_Pending] = deque()
+        executed = 0
+        while True:
+            with self._lock:
+                nxt = self._next_batch(flush)
+            if nxt is None:
+                break
+            ten, batch = nxt
+            try:
+                inflight.append(self._dispatch(ten, batch))
+                executed += 1
+            except Exception as e:
+                self._fail_batch(ten, batch, e)
+                self.pump_errors.append(e)
+                continue
+            if len(inflight) > self.pipeline_depth:
+                self._finish_safe(inflight.popleft())
+        while inflight:
+            self._finish_safe(inflight.popleft())
+        return executed
+
+    def _finish_safe(self, pending: _Pending) -> None:
+        try:
+            self._finish(pending)
+        except Exception as e:
+            self._fail_batch(pending.tenant, pending.batch, e)
+            self.pump_errors.append(e)
+
+    def _die(self, err: BaseException) -> None:
+        """Pump-thread crash: resolve EVERY outstanding and queued ticket
+        with the error so no caller blocks forever, and refuse new work."""
+        with self._cond:
+            self._fatal = err
+            self.pump_errors.append(err)
+            for ten in self.tenants.values():
+                ten.scheduler.abandon()
+                for rid in list(ten.child_parent):
+                    if rid not in ten.results:
+                        self._resolve(ten, rid, _BatchFailure(err))
+                for rid, tk in list(ten.tickets.items()):
+                    if rid not in ten.split and rid not in ten.results:
+                        self._resolve(ten, rid, _BatchFailure(err))
+                    tk._event.set()
+            self._cond.notify_all()
+
+    # -- results -------------------------------------------------------------
+    def _locate(self, ticket: Union[Ticket, int]) -> Tuple[_Tenant, int]:
+        if isinstance(ticket, Ticket):
+            return self._tenant(ticket.tenant), ticket.rid
+        return self._default, ticket
+
+    def result(self, ticket: Union[Ticket, int],
+               timeout: Optional[float] = None):
+        """The output rows for ``ticket``.
+
+        With the background pump running this blocks until the ticket
+        resolves (``TimeoutError`` after ``timeout`` seconds, with the
+        ticket left claimable); synchronously it flushes the pump on demand.
         Results are single-consumption: each ticket must be claimed exactly
-        once (or released with :meth:`drop`), else its output stays resident.
-        """
-        children = self._split.pop(ticket, None)
+        once (or released with :meth:`drop`), else its output stays
+        resident."""
+        ten, rid = self._locate(ticket)
+        if isinstance(ticket, Ticket) and self._thread is not None:
+            if not ticket._event.wait(timeout):
+                raise TimeoutError(
+                    f"ticket {rid} (tenant {ten.name!r}) not served "
+                    f"within {timeout}s")
+        return self._claim(ten, rid)
+
+    def _claim(self, ten: _Tenant, rid: int):
+        with self._lock:
+            children = ten.split.pop(rid, None)
+            if children is not None:
+                ten.tickets.pop(rid, None)
         if children is not None:
             parts = []
             try:
                 for c in children:
-                    parts.append(self.result(c))
+                    parts.append(self._claim(ten, c))
             except Exception:
                 # a chunk claim failed: release every unclaimed chunk so no
                 # output stays resident forever.  The raising chunk is
                 # included — its pump may have re-raised a DIFFERENT batch's
                 # failure while this chunk was still queued, in which case it
                 # was never consumed; if it WAS consumed the drop leaves at
-                # most a stale rid in _dropped (never an array).
-                for c in children[len(parts):]:
-                    self.drop(c)
+                # most a stale rid in the dropped set (never an array).
+                with self._lock:
+                    for c in children[len(parts):]:
+                        self._drop_rid(ten, c)
                 raise
             if parts and isinstance(parts[0], tuple):
                 return tuple(np.concatenate(col) for col in zip(*parts))
             return np.concatenate(parts)
-        if ticket not in self._results:
-            try:
-                self.pump(flush=True)
-            except Exception:
-                # the pump's batch may have been ours: if our ticket was
-                # resolved (to a _BatchFailure) fall through and raise the
-                # per-ticket error; otherwise it was someone else's problem
-                if ticket not in self._results:
-                    raise
-        res = self._results.pop(ticket)
+        async_pump = self._thread is not None
+        if not async_pump:
+            with self._lock:
+                resolved = rid in ten.results
+            if not resolved:
+                try:
+                    self.pump(flush=True)
+                except Exception:
+                    # the pump's batch may have been ours: if our ticket was
+                    # resolved (to a _BatchFailure) fall through and raise
+                    # the per-ticket error; else it was someone else's problem
+                    with self._lock:
+                        if rid not in ten.results:
+                            raise
+        with self._lock:
+            res = ten.results.pop(rid)
+            ten.tickets.pop(rid, None)
         if isinstance(res, _BatchFailure):
             raise RuntimeError(
-                f"batch execution failed for ticket {ticket}") from res.error
+                f"batch execution failed for ticket {rid}: {res.error}"
+            ) from res.error
         return res
 
-    def drop(self, ticket: int) -> None:
+    def _drop_rid(self, ten: _Tenant, rid: int) -> None:
+        """Caller holds the lock."""
+        tk = ten.tickets.pop(rid, None)
+        if tk is not None:
+            tk._event.set()   # a dropped ticket must never block a waiter
+        children = ten.split.pop(rid, None)
+        if children is not None:
+            ten.parent_left.pop(rid, None)
+            for c in children:
+                ten.child_parent.pop(c, None)
+                self._drop_rid(ten, c)
+            return
+        if ten.results.pop(rid, None) is None:
+            ten.dropped.add(rid)
+
+    def drop(self, ticket: Union[Ticket, int]) -> None:
         """Release an abandoned ticket (client gave up / timed out) so its
         result does not stay resident forever — whether it already executed
         or is still queued (the batch still runs; the output is discarded
         at demux).  Dropping a split parent releases every chunk."""
-        children = self._split.pop(ticket, None)
-        if children is not None:
-            for c in children:
-                self.drop(c)
-            return
-        if self._results.pop(ticket, None) is None:
-            self._dropped.add(ticket)
+        ten, rid = self._locate(ticket)
+        with self._lock:
+            self._drop_rid(ten, rid)
 
-    def __call__(self, *inputs, budget: float = 1.0):
-        """Synchronous convenience: submit + flush + demux one request."""
-        return self.result(self.submit(*inputs, budget=budget))
+    def __call__(self, *inputs, budget: float = 1.0,
+                 tenant: str = "default"):
+        """Synchronous convenience: submit + resolve one request (drives the
+        pump inline, or waits on the background pump when running)."""
+        return self.result(self.submit(*inputs, budget=budget, tenant=tenant))
 
     # -- telemetry -----------------------------------------------------------
-    def stats(self) -> Dict[str, Any]:
-        """Scheduler counters + executable hit/miss telemetry + latency
-        percentiles and per-point batch counts (both over the last
-        ``history`` entries)."""
-        s = self.scheduler.stats()
-        tels = [exe.telemetry() for exe in self._executables()
+    def _tenant_stats(self, ten: _Tenant) -> Dict[str, Any]:
+        s = ten.scheduler.stats()
+        tels = [exe.telemetry() for exe in ten.executables()
                 if hasattr(exe, "telemetry")]
         if tels:
             hits = sum(t["hits"] for t in tels)
@@ -404,22 +881,57 @@ class AccelServer:
             s["hit_rate"] = hits / (hits + misses) if hits + misses else 0.0
             s["cached_batches"] = tuple(sorted(
                 {b for t in tels for b in t["cached_batches"]}))
-        if self.latencies:
-            s["p50_latency_s"] = percentile(self.latencies, 0.50)
-            s["p95_latency_s"] = percentile(self.latencies, 0.95)
-        s["executed_batches"] = self.executed_batches
-        s["points"] = dict(Counter(r.point for r in self.reports
+        if ten.latencies:
+            s["p50_latency_s"] = percentile(ten.latencies, 0.50)
+            s["p95_latency_s"] = percentile(ten.latencies, 0.95)
+        s["executed_batches"] = ten.executed_batches
+        s["weight"] = ten.weight
+        s["points"] = dict(Counter(r.point for r in ten.reports
                                    if r.point is not None))
         # per-bits batch counts: lets the adaptive-switch benchmark attribute
         # latency to weight working points (W8/W4/W2) over the same window
-        s["bits_views"] = dict(Counter(r.bits for r in self.reports
+        s["bits_views"] = dict(Counter(r.bits for r in ten.reports
                                        if r.bits is not None))
         # per-bits resident weight bytes: packed-weight executables stream
         # sub-byte packed buffers at W4/W2, so the bytes actually moving
         # HBM -> VMEM per view are what this reports (not bucket counts)
         s["bits_bytes"] = {
             exe.bits: exe.packed.view_bytes(exe.bits)
-            for exe in self._executables()
+            for exe in ten.executables()
             if getattr(exe, "packed", None) is not None
             and getattr(exe, "bits", None) is not None}
+        # the closed loops' state: measured per-bucket execution EWMAs and
+        # the SLO controller's point/shift telemetry
+        s["bucket_latency_s"] = ten.latency.snapshot()
+        if ten.controller is not None:
+            s["slo"] = ten.controller.telemetry()
         return s
+
+    def stats(self, tenant: Optional[str] = None) -> Dict[str, Any]:
+        """Scheduler counters + executable hit/miss telemetry + latency
+        percentiles, per-point batch counts, measured bucket latencies and
+        SLO-controller state.  ``tenant=None`` keeps the single-tenant shape
+        when only one tenant is registered; with several it returns
+        aggregate counters plus a per-tenant breakdown under ``tenants``."""
+        with self._lock:
+            if tenant is not None:
+                return self._tenant_stats(self._tenant(tenant))
+            if len(self.tenants) == 1:
+                s = self._tenant_stats(next(iter(self.tenants.values())))
+                s["pump_errors"] = len(self.pump_errors)
+                return s
+            per = {n: self._tenant_stats(t) for n, t in self.tenants.items()}
+            agg: Dict[str, Any] = {"tenants": per}
+            for key in ("submitted", "split_requests", "split_chunks",
+                        "scheduled_batches", "scheduled_rows", "padded_rows",
+                        "pending", "executed_batches"):
+                agg[key] = sum(p.get(key, 0) for p in per.values())
+            rows = agg["scheduled_rows"] + agg["padded_rows"]
+            agg["padding_waste"] = agg["padded_rows"] / rows if rows else 0.0
+            all_lat = [lat for t in self.tenants.values()
+                       for lat in t.latencies]
+            if all_lat:
+                agg["p50_latency_s"] = percentile(all_lat, 0.50)
+                agg["p95_latency_s"] = percentile(all_lat, 0.95)
+            agg["pump_errors"] = len(self.pump_errors)
+            return agg

@@ -63,6 +63,19 @@ def test_straggler_watchdog_flags_slow_steps():
     assert wd.flagged == [10]
 
 
+def test_straggler_watchdog_history_is_bounded():
+    # regression: times grew unbounded over a long run even though only the
+    # last `window` samples ever feed the median
+    wd = ft.StragglerWatchdog(factor=3.0, window=8)
+    for i in range(10_000):
+        wd.observe(i, 0.1)
+    assert len(wd.times) == 8
+    # the bounded buffer must behave identically to the old last-window slice:
+    # after 8 fast steps the median is fast, so a 5x step still flags
+    assert wd.observe(10_000, 0.5)
+    assert wd.flagged == [10_000]
+
+
 def test_failure_mid_save_keeps_last_good_checkpoint(tmp_path):
     """Atomic rename: a .tmp dir never shadows the last good step."""
     from repro.ckpt import checkpoint as ckpt

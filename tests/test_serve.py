@@ -9,7 +9,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.adaptive import RuntimePolicy, WorkingPoint
 from repro.models.params import init_params
-from repro.runtime import model_api
+from repro.runtime import model_api, serve
 from repro.runtime.serve import AdaptiveLMServer
 
 
@@ -82,3 +82,23 @@ def test_working_points_share_master_weights():
     for k in tree["codes"]:
         np.testing.assert_array_equal(np.asarray(tree["codes"][k]),
                                       np.asarray(tree2["codes"][k]))
+
+
+def test_greedy_generate_empty_prompt():
+    # regression: S0 == 0 skipped the warmup loop and hit a NameError on
+    # `logits`; the empty-prompt path now seeds generation with token 0
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0), max_seq=16)
+    prompt = jnp.zeros((2, 0), jnp.int32)
+    out = serve.greedy_generate(params, cfg, prompt, max_new=4, seq_len=16)
+    assert out.shape == (2, 4)
+    assert int(out[0, 0]) == 0          # BOS seed counts as the first token
+
+
+def test_greedy_generate_prompt_prefix_consistency():
+    cfg = get_config("qwen1.5-0.5b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(1), max_seq=16)
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 3), 0, cfg.vocab)
+    out = serve.greedy_generate(params, cfg, prompt, max_new=5, seq_len=16)
+    assert out.shape == (1, 3 + 5)
+    np.testing.assert_array_equal(np.asarray(out[:, :3]), np.asarray(prompt))
