@@ -8,6 +8,7 @@
   adaptive_switch         - MDC runtime-adaptivity benchmark
   serve_throughput        - coalesced vs naive per-request serving
   qpath_latency           - fake-quant f32 vs packed-kernel execution path
+  dse_pareto              - resource-constrained Pareto fronts of working points
   roofline                - §Roofline table aggregated from dry-run artifacts
 """
 from __future__ import annotations
@@ -37,9 +38,9 @@ def main() -> None:
             failures.append((name, repr(e)))
             traceback.print_exc()
 
-    from benchmarks import (adaptive_switch, qpath_latency, roofline_table,
-                            serve_throughput, table1_frameworks,
-                            table2_mixed_precision)
+    from benchmarks import (adaptive_switch, dse_pareto, qpath_latency,
+                            roofline_table, serve_throughput,
+                            table1_frameworks, table2_mixed_precision)
 
     section("table1_frameworks", lambda: [
         print("table1_frameworks," + ",".join(f"{k}={v}" for k, v in r.items()))
@@ -57,6 +58,9 @@ def main() -> None:
     section("qpath_latency", lambda: [
         print("qpath_latency," + ",".join(f"{k}={v}" for k, v in r.items()))
         for r in qpath_latency.run(full)])
+    section("dse_pareto", lambda: [
+        print("dse_pareto," + ",".join(f"{k}={v}" for k, v in r.items()))
+        for r in dse_pareto.run(full)])
     section("roofline", roofline_table.main)
 
     if failures:

@@ -9,7 +9,9 @@
    with value_info-sized FIFOs (``--fifo-slack`` scales the depths),
 4. serve batch 1/3/8 from the one batch-polymorphic artifact,
 5. merge W8/W4/W2 working points into one adaptive accelerator and switch
-   at runtime.
+   at runtime,
+6. explore the design space under a resource budget and serve the computed
+   Pareto front adaptively (ONNX -> constrained points -> server).
 """
 import argparse
 import os
@@ -25,6 +27,7 @@ from repro.configs.mnist_cnn import CONFIG as CNN
 from repro.core.adaptive import WorkingPoint
 from repro.core.flow import DesignFlow
 from repro.core.reader import cnn_to_ir
+from repro.dse import ResourceBudget
 from repro.models import cnn
 from repro.quant.qtypes import DatatypeConfig
 
@@ -86,6 +89,24 @@ def main():
         y = acc(name, x)
         print(f"working point {name}: argmax[0]={int(jnp.argmax(y[0]))}")
     print("sharing report:", acc.sharing_report())
+
+    # 6. constrained DSE: screen rungs against a byte budget, score the
+    #    survivors on the calibration batch, serve the resulting front —
+    #    the one documented path from ONNX to an adaptive server
+    front = flow.explore((np.asarray(x),),
+                         budget=ResourceBudget(total_bytes=400_000))
+    print("Pareto front:", ", ".join(
+        f"{p.point.name}({p.total_bytes}B, agree={p.agreement:.2f})"
+        for p in front.points))
+    front.save("/tmp/mnist_cnn.front.json")
+    served = flow.run(targets=("qjax",), calib_inputs=(np.asarray(x),),
+                      **front.run_kwargs())
+    srv = served.serve_adaptive(points=front, max_batch=8, max_wait=0.0,
+                                selector=front.selector())
+    tk = srv.submit(np.asarray(x[:2]))
+    srv.pump(flush=True)
+    print(f"served from the front: logits {tuple(srv.result(tk).shape)} "
+          f"at point {srv.reports[-1].bits}-bit")
 
 
 if __name__ == "__main__":

@@ -22,7 +22,8 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Sequence, Tuple
+from typing import (Callable, Deque, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +38,7 @@ class WorkingPoint:
     name: str
     weight_bits: int            # 8 / 4 / 2 (derived views of the master)
     act_dtype: str = "bfloat16"  # activation stream dtype
+    act_bits: Optional[int] = None  # activation code bits (DSE-emitted points)
 
 
 class AdaptiveAccelerator:
@@ -133,9 +135,45 @@ def shared_point_executables(writer, points: Sequence[WorkingPoint], *,
             for p in points}
 
 
+# ---------------------------------------------------------------------------
+# Point selection: ONE protocol for every runtime point-selection surface
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class PointSelector(Protocol):
+    """The unified point-selection surface.
+
+    Historically three competing surfaces picked the working point: the
+    open-loop ``RuntimePolicy.select(energy_budget_frac)`` heuristic, the
+    closed-loop ``SLOController.select()``, and per-call ``bits=`` kwargs on
+    the writers.  They now meet in one protocol that
+    :class:`~repro.runtime.serve.AccelServer` tenants consume directly
+    (``selector=``):
+
+    * ``points`` — the ladder, highest precision first (what an SLO walks);
+    * ``select(budget)`` — the working point for the next batch.  Open-loop
+      selectors read the batch's energy budget; closed-loop selectors ignore
+      it (their signal is :meth:`observe`);
+    * ``observe(latency_s)`` — feedback from every completed request.
+      Open-loop selectors may no-op.
+
+    Implementations: :class:`BudgetSelector` (open-loop energy heuristic),
+    :class:`SLOController` (closed-loop p95 ladder walk),
+    :class:`FixedSelector` (pin one point — the per-call ``bits=`` pattern).
+    The legacy :class:`RuntimePolicy` entry point survives as a thin
+    deprecation shim over :class:`BudgetSelector`.
+    """
+
+    points: Sequence[WorkingPoint]
+
+    def select(self, budget: float = 1.0) -> WorkingPoint: ...
+
+    def observe(self, latency_s: float) -> None: ...
+
+
 @dataclass
-class RuntimePolicy:
-    """CPS-style runtime manager: pick the working point from the budget.
+class BudgetSelector:
+    """CPS-style open-loop selector: pick the working point from the budget.
 
     Mirrors the paper's scenario — "when a limited energy budget is left a
     reduction in energy consumption is worth the cost of some accuracy loss".
@@ -143,13 +181,47 @@ class RuntimePolicy:
     points: List[WorkingPoint]
     thresholds: List[float] = field(default_factory=list)  # descending budgets
 
-    def select(self, energy_budget_frac: float) -> WorkingPoint:
+    def select(self, budget: float = 1.0) -> WorkingPoint:
         ths = self.thresholds or [1.0 - (i + 1) / len(self.points)
                                   for i in range(len(self.points) - 1)]
         for pt, th in zip(self.points[:-1], ths):
-            if energy_budget_frac > th:
+            if budget > th:
                 return pt
         return self.points[-1]
+
+    def observe(self, latency_s: float) -> None:
+        """Open-loop: measured latency does not move the choice."""
+
+
+class RuntimePolicy(BudgetSelector):
+    """Deprecated alias of :class:`BudgetSelector`.
+
+    Kept so existing call sites (``RuntimePolicy(points).select(frac)``)
+    behave bit-identically; new code should construct a
+    :class:`BudgetSelector` (or any other :class:`PointSelector`) and hand it
+    to the server as ``selector=``.
+    """
+
+    def select(self, energy_budget_frac: float = 1.0) -> WorkingPoint:
+        return super().select(energy_budget_frac)
+
+
+@dataclass
+class FixedSelector:
+    """Pin one working point — the typed replacement for threading a
+    ``bits=`` kwarg through every call: build the point's executable once and
+    select it unconditionally."""
+    point: WorkingPoint
+
+    @property
+    def points(self) -> List[WorkingPoint]:
+        return [self.point]
+
+    def select(self, budget: float = 1.0) -> WorkingPoint:
+        return self.point
+
+    def observe(self, latency_s: float) -> None:
+        """Nothing to adapt: the point is pinned."""
 
 
 # ---------------------------------------------------------------------------
@@ -206,7 +278,9 @@ class SLOController:
         self._window: Deque[float] = deque(maxlen=slo.window)
         self._since_shift = 0
 
-    def select(self) -> WorkingPoint:
+    def select(self, budget: float = 1.0) -> WorkingPoint:
+        """Closed loop: the measured-latency choice; ``budget`` is ignored
+        (accepted so the controller satisfies :class:`PointSelector`)."""
         return self.points[self.idx]
 
     @property

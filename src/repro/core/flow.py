@@ -19,8 +19,10 @@ searches for the latter greedily against the float reference.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+import inspect
+from dataclasses import dataclass, field, fields
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -33,8 +35,9 @@ from repro.core.writers.jax_writer import BatchedExecutable, JaxWriter
 from repro.core.writers.stream_writer import StreamWriter
 from repro.core.writers.dist_writer import DistWriter
 from repro.core.writers.qjax_writer import QJaxWriter
-from repro.core.adaptive import (AdaptiveAccelerator, RuntimePolicy,
-                                 WorkingPoint, shared_point_executables)
+from repro.core.adaptive import (AdaptiveAccelerator, PointSelector,
+                                 RuntimePolicy, WorkingPoint,
+                                 shared_point_executables)
 from repro.quant.qtypes import DatatypeConfig, PrecisionMap
 from repro.quant.ptq import graph_weight_stats
 
@@ -46,6 +49,47 @@ DEFAULT_POINTS = (WorkingPoint("w8", 8), WorkingPoint("w4", 4),
                   WorkingPoint("w2", 2))
 
 Precision = Union[DatatypeConfig, PrecisionMap]
+
+
+@dataclass(frozen=True)
+class WriterOptions:
+    """Typed writer configuration — the one validated surface replacing the
+    per-writer kwarg sprawl that used to thread through ``writer_kwargs=``
+    dicts.  Every field is optional; a set field is forwarded to each target
+    writer *that accepts it* (``fifo_slack`` to the stream writer,
+    ``default_bits``/``use_kernel``/... to the qjax writer), so one options
+    object configures a multi-target run.  ``DesignFlow.run`` validates the
+    merged per-writer kwargs once, with unknown-key errors naming the
+    writer."""
+
+    fifo_slack: Optional[float] = None      # stream: FIFO depth headroom
+    default_bits: Optional[int] = None      # qjax: build(bits=None) point
+    use_kernel: Optional[bool] = None       # qjax: force/forbid Pallas path
+    interpret: Optional[bool] = None        # qjax: Pallas interpret override
+    int8_act: Optional[bool] = None         # qjax: fully-integer dataflow
+    packed_weights: Optional[bool] = None   # qjax: sub-byte HBM residency
+    dw_mode: Optional[str] = None           # qjax: "direct" | "im2col"
+
+    def __post_init__(self):
+        if self.dw_mode is not None and self.dw_mode not in ("direct",
+                                                             "im2col"):
+            raise ValueError(f"dw_mode must be 'direct' or 'im2col', "
+                             f"got {self.dw_mode!r}")
+        if self.fifo_slack is not None and self.fifo_slack <= 0:
+            raise ValueError(f"fifo_slack must be positive, "
+                             f"got {self.fifo_slack}")
+
+    def set_fields(self) -> Dict[str, Any]:
+        return {f.name: getattr(self, f.name) for f in fields(self)
+                if getattr(self, f.name) is not None}
+
+
+def _writer_params(cls) -> set:
+    """Optional constructor keywords a writer class accepts (everything past
+    the positional graph/dtconfig/act_ranges triple)."""
+    sig = inspect.signature(cls.__init__)
+    return {name for name in sig.parameters
+            if name not in ("self", "graph", "dtconfig", "act_ranges")}
 
 
 @dataclass
@@ -77,17 +121,29 @@ class FlowResult:
             for t in self.graph.inputs))
         return AccelServer(self.batched[target], **kwargs)
 
-    def serve_adaptive(self, points: Sequence[WorkingPoint] = DEFAULT_POINTS,
+    def serve_adaptive(self, points=DEFAULT_POINTS,
                        target: str = "qjax",
-                       policy: Optional[RuntimePolicy] = None,
-                       batch_cache: int = 8, **kwargs):
+                       policy: Optional[PointSelector] = None,
+                       batch_cache: int = 8,
+                       selector: Optional[PointSelector] = None, **kwargs):
         """An :class:`~repro.runtime.serve.AccelServer` whose per-batch
         precision working points ALL read one shared
-        :class:`~repro.quant.pack.PackedWeights` buffer: the
-        :class:`~repro.core.adaptive.RuntimePolicy` picks a point from each
-        batch's energy budget, and switching is a static kernel-arg change —
-        no re-build, no weight copy (requires the packed-weight ``"qjax"``
-        target in this result)."""
+        :class:`~repro.quant.pack.PackedWeights` buffer — switching is a
+        static kernel-arg change: no re-build, no weight copy (requires the
+        packed-weight ``"qjax"`` target in this result).
+
+        ``points`` is a sequence of
+        :class:`~repro.core.adaptive.WorkingPoint` or a
+        :class:`~repro.dse.ParetoFront` (the explorer's output — the server
+        then walks the computed front instead of the hardcoded ladder).  The
+        working point per batch comes from ``selector`` (any
+        :class:`~repro.core.adaptive.PointSelector`) or the legacy
+        ``policy``; with neither, an open-loop
+        :class:`~repro.core.adaptive.RuntimePolicy` over ``points`` is
+        built."""
+        from repro.dse.pareto import ParetoFront   # lazy: optional consumer
+        if isinstance(points, ParetoFront):
+            points = points.working_points()
         writer = self.writers.get(target)
         if writer is None or not hasattr(writer, "packed"):
             raise KeyError(
@@ -95,6 +151,9 @@ class FlowResult:
                 f"'qjax'); this result has {tuple(self.writers)}")
         pts = shared_point_executables(writer, points,
                                        max_entries=batch_cache)
+        if selector is not None:
+            return self.serve(target, selector=selector,
+                              point_executables=pts, **kwargs)
         return self.serve(target, policy=policy or RuntimePolicy(list(points)),
                           point_executables=pts, **kwargs)
 
@@ -152,15 +211,25 @@ class DesignFlow:
             passes: Optional[Sequence[Callable]] = None,
             fifo_slack: float = 1.0,
             batch_cache: int = 8,
-            writer_kwargs: Optional[Dict[str, Dict]] = None) -> FlowResult:
+            writer_kwargs: Optional[Dict[str, Dict]] = None,
+            options: Optional[WriterOptions] = None) -> FlowResult:
         """Compile the graph for ``targets``.
 
         ``fifo_slack`` scales every FIFO depth the stream writer derives from
         ``value_info`` (rate-mismatch headroom); ``batch_cache`` bounds the
         per-target LRU of traced batch shapes in ``FlowResult.batched``;
-        ``writer_kwargs`` passes extra constructor kwargs per target
-        (``fifo_slack`` is sugar for ``{"stream": {"fifo_slack": ...}}``).
+        ``options`` is the typed writer configuration
+        (:class:`WriterOptions` — each set field reaches every target writer
+        that accepts it); ``writer_kwargs`` is the legacy per-target kwarg
+        escape hatch (it wins over ``options`` where both set a key;
+        ``fifo_slack`` is sugar for ``{"stream": {"fifo_slack": ...}}``).
+        The merged per-writer kwargs are validated here: an unknown key
+        raises a :class:`ValueError` naming the writer instead of a bare
+        ``TypeError`` deep in its constructor.
         """
+        for t in targets:
+            if t not in WRITERS:
+                raise KeyError(f"unknown target {t!r}; have {tuple(WRITERS)}")
         default_dt, min_act, min_wt = _split_precision(dtconfig)
         g = self.transform(dtconfig, passes)
         act_ranges: Dict[str, float] = {}
@@ -170,9 +239,27 @@ class DesignFlow:
             # activation ranges, not values already clipped by quantization
             act_ranges = self.calibrate(*calib_inputs,
                                         graph=strip_precision(g))
+        stray = sorted(set(writer_kwargs or {}) - set(targets))
+        if stray:
+            raise KeyError(f"writer_kwargs for {stray} not in targets "
+                           f"{tuple(targets)}")
         wkw = {t: dict((writer_kwargs or {}).get(t, {})) for t in targets}
+        opt_fields = options.set_fields() if options is not None else {}
+        for t in targets:
+            accepted = _writer_params(WRITERS[t])
+            for k, v in opt_fields.items():
+                if k in accepted:
+                    wkw[t].setdefault(k, v)
         if "stream" in wkw:
             wkw["stream"].setdefault("fifo_slack", fifo_slack)
+        for t in targets:
+            unknown = sorted(set(wkw[t]) - _writer_params(WRITERS[t]))
+            if unknown:
+                accepted = sorted(_writer_params(WRITERS[t]))
+                raise ValueError(
+                    f"unknown option(s) {unknown} for writer {t!r} "
+                    f"({WRITERS[t].__name__}); it accepts "
+                    f"{accepted if accepted else 'no options'}")
         writers, exes, batched = {}, {}, {}
         for t in targets:
             w = WRITERS[t](g, default_dt, act_ranges, **wkw[t])
@@ -183,6 +270,31 @@ class DesignFlow:
         if dtconfig is not None and min_wt < 32:
             stats = graph_weight_stats(g, default_dt)
         return FlowResult(g, writers, exes, act_ranges, stats, batched)
+
+    # -- design-space exploration -------------------------------------------
+    def explore(self, calib_inputs: tuple, *, budget=None, **kwargs):
+        """Resource-constrained design-space exploration: screen candidate
+        working points analytically against ``budget`` (a
+        :class:`~repro.dse.ResourceBudget`), validate survivors on the
+        calibration batch, and return the pruned
+        :class:`~repro.dse.ParetoFront`.
+
+        The front plugs straight back into the flow::
+
+            front = DesignFlow(graph).explore(calib, budget=budget)
+            result = DesignFlow(graph).run(("qjax",), calib_inputs=calib,
+                                           **front.run_kwargs())
+            srv = result.serve_adaptive(points=front,
+                                        selector=front.selector(slo))
+
+        Extra keyword arguments reach
+        :class:`~repro.dse.DesignSpaceExplorer` (``ladder``,
+        ``act_bits_choices``, ``fifo_slack_choices``, ``per_layer``, ...).
+        Raises :class:`~repro.dse.BudgetInfeasibleError` when nothing
+        fits."""
+        from repro.dse import DesignSpaceExplorer   # lazy: keeps flow light
+        return DesignSpaceExplorer(self.graph, calib_inputs, budget=budget,
+                                   **kwargs).explore()
 
     # -- mixed-precision exploration ----------------------------------------
     def explore_mixed_precision(self, calib_inputs: tuple, **kwargs

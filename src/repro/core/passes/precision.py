@@ -23,6 +23,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 
 from repro.core.ir import Graph, Node
+from repro.quant.ptq import top1_agreement
 from repro.quant.qtypes import DatatypeConfig, PrecisionMap
 
 # ops with weight initializers worth exploring per-layer
@@ -72,11 +73,6 @@ def quantizable_layers(graph: Graph) -> List[Node]:
             and any(i in inits and inits[i].ndim >= 2 for i in n.inputs)]
 
 
-def _agreement(logits, ref) -> float:
-    return float(jnp.mean((jnp.argmax(logits, -1) == jnp.argmax(ref, -1))
-                          .astype(jnp.float32)))
-
-
 def explore_mixed_precision(
         graph: Graph, calib_inputs: Tuple, *,
         act_bits: int = 16,
@@ -103,7 +99,7 @@ def explore_mixed_precision(
                            for n, b in candidate.items()})
         g = make_assign_precision(pm)(graph)
         w = JaxWriter(g, pm.default, act_ranges)
-        return _agreement(w.build()(*calib_inputs), ref_logits)
+        return top1_agreement(w.build()(*calib_inputs), ref_logits)
 
     history: List[Dict] = []
     while True:

@@ -1,0 +1,19 @@
+"""Resource-constrained design-space exploration.
+
+``DesignSpaceExplorer`` screens candidate working points analytically
+against a ``ResourceBudget`` (roofline bytes/FLOPs, stream FIFO bytes,
+im2col scratch, predicted latency), validates the survivors on the
+calibration set, and emits a serializable ``ParetoFront`` the serving
+runtime walks directly — see ``DesignFlow.explore`` for the one-call entry
+point and ``FlowResult.serve_adaptive(points=front)`` for consumption.
+"""
+from repro.dse.budget import BudgetInfeasibleError, ResourceBudget
+from repro.dse.explorer import DesignSpaceExplorer, scratch_bytes_for
+from repro.dse.pareto import (FRONT_SCHEMA, ParetoFront, ParetoPoint,
+                              prune_dominated)
+
+__all__ = [
+    "BudgetInfeasibleError", "DesignSpaceExplorer", "FRONT_SCHEMA",
+    "ParetoFront", "ParetoPoint", "ResourceBudget", "prune_dominated",
+    "scratch_bytes_for",
+]

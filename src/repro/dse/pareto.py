@@ -1,0 +1,215 @@
+"""Pareto points and the serializable front the runtime ladder walks.
+
+A :class:`ParetoPoint` is one costed-and-validated working point: the
+runtime rung (a :class:`~repro.core.adaptive.WorkingPoint`) plus the byte /
+latency / accuracy metrics the explorer derived for it.  Dominance is over
+the three minimized objectives ``(total_bytes, latency, -agreement)``;
+:func:`prune_dominated` is deterministic (stable order, strict dominance).
+
+A :class:`ParetoFront` bundles the surviving points with the *compile-time*
+configuration they share — activation code bits, FIFO slack, per-layer
+weight-bit caps, the batch-bucket ladder, and the budget they were screened
+against — because every point on one front must be servable from ONE
+packed-weight writer (the paper's zero-reload precision switch).  It
+round-trips through JSON (``save``/``load``) and plugs into the runtime
+directly: ``working_points()`` feeds ``shared_point_executables`` /
+``serve_adaptive(points=front)``, ``selector(slo=...)`` builds the
+:class:`~repro.core.adaptive.PointSelector` that walks it.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.adaptive import (BudgetSelector, PointSelector,
+                                 ServiceObjective, SLOController,
+                                 WorkingPoint)
+from repro.dse.budget import ResourceBudget
+from repro.quant.qtypes import DatatypeConfig, PrecisionMap
+
+# bump on any front-layout change; `load` refuses mismatched files rather
+# than mis-reading them
+FRONT_SCHEMA = 1
+
+
+@dataclass(frozen=True)
+class ParetoPoint:
+    """One working point with the metrics the explorer screened it on."""
+
+    point: WorkingPoint
+    weight_bytes: int            # PackedWeights.view_bytes(bits, caps)
+    fifo_bytes: int              # stream topology total_fifo_bytes
+    scratch_bytes: int           # im2col patch traffic at the max bucket
+    predicted_latency_s: float   # roofline max(compute, memory) term
+    agreement: float             # top-1 agreement vs the float reference
+    measured_latency_s: Optional[float] = None   # LatencyEWMA, when warm
+
+    @property
+    def total_bytes(self) -> int:
+        return self.weight_bytes + self.fifo_bytes + self.scratch_bytes
+
+    @property
+    def latency_s(self) -> float:
+        """The latency objective: measured when available, else predicted."""
+        return (self.measured_latency_s if self.measured_latency_s is not None
+                else self.predicted_latency_s)
+
+    def objectives(self) -> Tuple[float, float, float]:
+        """Minimized objective vector."""
+        return (float(self.total_bytes), self.latency_s, -self.agreement)
+
+    def dominates(self, other: "ParetoPoint") -> bool:
+        """Strict Pareto dominance: no worse in every objective, strictly
+        better in at least one."""
+        a, b = self.objectives(), other.objectives()
+        return all(x <= y for x, y in zip(a, b)) and a != b
+
+    def metrics(self) -> Dict[str, float]:
+        return {
+            "weight_bytes": self.weight_bytes,
+            "fifo_bytes": self.fifo_bytes,
+            "scratch_bytes": self.scratch_bytes,
+            "total_bytes": self.total_bytes,
+            "predicted_latency_s": self.predicted_latency_s,
+            "measured_latency_s": self.measured_latency_s,
+            "agreement": self.agreement,
+        }
+
+    def to_dict(self) -> Dict:
+        return {
+            "name": self.point.name,
+            "weight_bits": self.point.weight_bits,
+            "act_dtype": self.point.act_dtype,
+            "act_bits": self.point.act_bits,
+            **self.metrics(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ParetoPoint":
+        wp = WorkingPoint(d["name"], int(d["weight_bits"]),
+                          d.get("act_dtype", "bfloat16"),
+                          d.get("act_bits"))
+        return cls(wp,
+                   weight_bytes=int(d["weight_bytes"]),
+                   fifo_bytes=int(d["fifo_bytes"]),
+                   scratch_bytes=int(d["scratch_bytes"]),
+                   predicted_latency_s=float(d["predicted_latency_s"]),
+                   agreement=float(d["agreement"]),
+                   measured_latency_s=d.get("measured_latency_s"))
+
+
+def prune_dominated(points: Sequence[ParetoPoint]) -> List[ParetoPoint]:
+    """Drop every strictly dominated point, preserving input order.
+
+    Deterministic: dominance is strict, so objective-identical duplicates
+    all survive (the explorer never emits duplicates, but property tests
+    feed arbitrary sets)."""
+    pts = list(points)
+    return [p for p in pts
+            if not any(q.dominates(p) for q in pts if q is not p)]
+
+
+@dataclass
+class ParetoFront:
+    """The explorer's output: non-dominated points + their shared compile
+    configuration, ordered highest precision first (the ladder an
+    :class:`~repro.core.adaptive.SLOController` walks down under load)."""
+
+    graph_name: str
+    points: List[ParetoPoint]
+    act_bits: int = 8                     # activation code bits (compile axis)
+    fifo_slack: float = 1.0               # stream FIFO headroom (compile axis)
+    per_layer_bits: Dict[str, int] = field(default_factory=dict)  # weight caps
+    buckets: Tuple[int, ...] = ()         # batch-bucket ladder candidates cost
+    budget: Optional[ResourceBudget] = None
+    tuned_tilings: int = 0                # autotune-cache hits at explore time
+    schema: int = FRONT_SCHEMA
+
+    def __post_init__(self):
+        self.points = sorted(self.points,
+                             key=lambda p: -p.point.weight_bits)
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    # -- runtime plumbing ----------------------------------------------------
+    def working_points(self) -> List[WorkingPoint]:
+        """The ladder ``shared_point_executables`` / ``serve_adaptive``
+        consume (highest precision first)."""
+        return [p.point for p in self.points]
+
+    def precision_map(self) -> PrecisionMap:
+        """The per-layer precision annotation realizing this front's caps:
+        the runtime rung is further clamped per node by
+        ``QJaxContext.weight_bits`` (a W4-capped layer stays W4 at the W8
+        point)."""
+        default = DatatypeConfig(self.act_bits, 8)
+        return PrecisionMap(default,
+                            {n: DatatypeConfig(self.act_bits, b)
+                             for n, b in sorted(self.per_layer_bits.items())})
+
+    def run_kwargs(self) -> Dict:
+        """Keyword arguments reproducing this front's compile configuration
+        through ``DesignFlow.run`` (the one documented ONNX -> constrained
+        points -> server path)."""
+        return {"dtconfig": self.precision_map(),
+                "fifo_slack": self.fifo_slack}
+
+    def selector(self, slo: Optional[ServiceObjective] = None
+                 ) -> PointSelector:
+        """A :class:`~repro.core.adaptive.PointSelector` over this front:
+        closed-loop (:class:`SLOController`) when an ``slo`` is given, else
+        the open-loop :class:`BudgetSelector`."""
+        pts = self.working_points()
+        if slo is not None:
+            return SLOController(pts, slo)
+        return BudgetSelector(pts)
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict:
+        return {
+            "schema": self.schema,
+            "graph": self.graph_name,
+            "act_bits": self.act_bits,
+            "fifo_slack": self.fifo_slack,
+            "per_layer_bits": dict(sorted(self.per_layer_bits.items())),
+            "buckets": list(self.buckets),
+            "budget": self.budget.to_dict() if self.budget else None,
+            "tuned_tilings": self.tuned_tilings,
+            "points": [p.to_dict() for p in self.points],
+        }
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ParetoFront":
+        if d.get("schema") != FRONT_SCHEMA:
+            raise ValueError(
+                f"ParetoFront schema mismatch: file has {d.get('schema')!r}, "
+                f"this build reads {FRONT_SCHEMA} — re-run the explorer")
+        budget = (ResourceBudget.from_dict(d["budget"])
+                  if d.get("budget") else None)
+        return cls(graph_name=d["graph"],
+                   points=[ParetoPoint.from_dict(p) for p in d["points"]],
+                   act_bits=int(d.get("act_bits", 8)),
+                   fifo_slack=float(d.get("fifo_slack", 1.0)),
+                   per_layer_bits={k: int(v) for k, v in
+                                   d.get("per_layer_bits", {}).items()},
+                   buckets=tuple(int(b) for b in d.get("buckets", ())),
+                   budget=budget,
+                   tuned_tilings=int(d.get("tuned_tilings", 0)))
+
+    @classmethod
+    def from_json(cls, text: str) -> "ParetoFront":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "ParetoFront":
+        with open(path) as f:
+            return cls.from_json(f.read())

@@ -71,6 +71,18 @@ def disk_cache() -> Dict[str, Tuple[int, ...]]:
     return _disk_state["data"]  # type: ignore[return-value]
 
 
+def tuned_entries(prefix: str = "") -> Dict[str, Tuple[int, ...]]:
+    """Snapshot of the persisted tuned tilings whose key starts with
+    ``prefix`` (``""`` = all families; ``"dw:"`` = the depthwise kernels).
+
+    The DSE reads this to report which candidate shapes already carry a
+    *timed* block pick — a tuned tiling means the measured-latency term for
+    that shape is grounded in a real kernel timing rather than the static
+    heuristic."""
+    return {k: tuple(v) for k, v in disk_cache().items()
+            if k.startswith(prefix)}
+
+
 def disk_put(key: str, blocks: Tuple[int, ...]) -> None:
     """Write-through one timed result (no-op when persistence is off)."""
     path = autotune_cache_path()

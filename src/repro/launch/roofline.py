@@ -214,6 +214,60 @@ def im2col_scratch_bytes(graph, *, batch: int = 1,
     return out
 
 
+_MAC_DW_OPS = ("DepthwiseConv", "FusedDepthwiseConv")
+_MAC_CONV_OPS = ("Conv", "FusedConv")
+_MAC_GEMM_OPS = ("Gemm", "FusedGemm", "MatMul")
+
+
+def graph_mac_count(graph, *, batch: int = 1) -> Dict[str, int]:
+    """Multiply-accumulate count per weighted node of a flow graph.
+
+    The DSE's compute-side roofline term: Conv is ``B*OH*OW*KH*KW*Cin*Cout``,
+    depthwise ``B*OH*OW*KH*KW*C`` (each output channel reads its own
+    ``KH*KW`` taps), Gemm/MatMul ``B*K*N``.  Returns per-node MACs keyed by
+    node name plus a ``"_total"`` sum; ``value_info`` must be populated (run
+    ``infer_shapes`` first).  FLOPs = 2 * MACs."""
+    out: Dict[str, int] = {}
+    total = 0
+    for n in graph.topo_order():
+        dw = n.op in _MAC_DW_OPS
+        if dw or n.op in _MAC_CONV_OPS:
+            w = graph.initializers[n.inputs[1]]
+            ks = n.attrs.get("kernel_shape") or w.shape[:2]
+            kh, kw = int(ks[0]), int(ks[1])
+            oshape = graph.value_info[n.outputs[0]].shape
+            oh, ow = int(oshape[1]), int(oshape[2])
+            cout = int(w.shape[3])
+            cin = 1 if dw else int(w.shape[2])
+            macs = batch * oh * ow * kh * kw * cin * cout
+        elif n.op in _MAC_GEMM_OPS:
+            init = next((i for i in n.inputs[1:]
+                         if i in graph.initializers), None)
+            if init is None:
+                continue
+            w = graph.initializers[init]
+            k, nn = int(w.shape[-2]), int(w.shape[-1])
+            macs = batch * k * nn
+        else:
+            continue
+        out[n.name] = macs
+        total += macs
+    out["_total"] = total
+    return out
+
+
+def predict_latency_s(flops: float, hbm_bytes: float, *,
+                      peak_flops: float = PEAK_FLOPS_INT8,
+                      hbm_bw: float = HBM_BW) -> float:
+    """Roofline latency: max of the compute and memory terms (overlapped).
+
+    The DSE's analytical latency objective — ``flops`` from
+    :func:`graph_mac_count` (*2), ``hbm_bytes`` the streamed weight + scratch
+    traffic of a candidate working point.  Defaults assume the int8 hot
+    path's peak."""
+    return max(flops / peak_flops, hbm_bytes / hbm_bw)
+
+
 def model_flops_for(cfg, shape, n_params_active: int) -> float:
     """Useful model FLOPs per executed step (global)."""
     if shape.kind == "train":

@@ -33,7 +33,7 @@ multiplying it back per element.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -202,10 +202,21 @@ class PackedWeights:
         """Bytes of the shared master buffer (codes + scales)."""
         return sum(t.nbytes for t in self.tensors.values())
 
-    def view_bytes(self, bits: int) -> int:
+    def view_bytes(self, bits: int,
+                   caps: Optional[Dict[str, int]] = None) -> int:
         """Resident streamed weight bytes at a working point (sub-byte packed
-        buffers below W8; see :meth:`PackedTensor.view_nbytes`)."""
-        return sum(t.view_nbytes(bits) for t in self.tensors.values())
+        buffers below W8; see :meth:`PackedTensor.view_nbytes`).
+
+        ``caps`` optionally bounds individual initializers below the runtime
+        view (``{name: max_bits}`` — the per-layer precision caps a
+        :class:`~repro.quant.qtypes.PrecisionMap` realizes through
+        ``QJaxContext.weight_bits``): the effective bits of a capped tensor
+        are ``min(bits, caps[name])``, exactly what the mixed-precision
+        executable streams.  The DSE's weight-bytes budget term is this
+        number."""
+        caps = caps or {}
+        return sum(t.view_nbytes(min(bits, caps.get(name, bits)))
+                   for name, t in self.tensors.items())
 
     def sharing_report(self, n_points: int = 3) -> Dict[str, float]:
         """Merged-vs-separate weight storage for ``n_points`` working points

@@ -110,6 +110,14 @@ def calibrate_acts(capture_fn: Callable[[], Dict[str, jax.Array]]) -> Dict[str, 
     return {k: float(jnp.max(jnp.abs(v))) for k, v in acts.items()}
 
 
+def top1_agreement(logits, ref) -> float:
+    """Fraction of calibration rows whose argmax matches the float
+    reference's — the accuracy proxy every explorer in the flow optimizes
+    (greedy mixed-precision descent and the DSE's accuracy objective)."""
+    return float(jnp.mean((jnp.argmax(logits, -1) == jnp.argmax(ref, -1))
+                          .astype(jnp.float32)))
+
+
 def act_code_qtype(bits: int, act_range: float) -> QType:
     """The integer-code qtype of one activation FIFO: a power-of-two scale
     (``2^-frac``) sized so the calibrated range fits ``min(bits, 8)`` signed

@@ -26,8 +26,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.adaptive import (RuntimePolicy, ServiceObjective,
-                                 SLOController, WorkingPoint)
+from repro.core.adaptive import (PointSelector, RuntimePolicy,
+                                 ServiceObjective, SLOController,
+                                 WorkingPoint)
 from repro.models import encdec, transformer
 from repro.quant.ptq import QuantizedParams, dequantize_tree, quantize_tree_native
 from repro.runtime import model_api
@@ -255,12 +256,13 @@ class _Tenant:
                  max_batch: int = 8, max_wait: float = 0.005,
                  queue_depth: int = 1024,
                  buckets: Optional[Sequence[int]] = None,
-                 policy: Optional[RuntimePolicy] = None,
+                 policy: Optional[PointSelector] = None,
                  point_executables: Optional[Dict[str, Callable]] = None,
                  signature: Optional[RequestSignature] = None,
                  packing: str = "fifo", weight: int = 1,
                  slo: Optional[ServiceObjective] = None,
                  latency: Optional[LatencyEWMA] = None,
+                 selector: Optional[PointSelector] = None,
                  clock: Callable[[], float] = time.monotonic,
                  history: int = 4096):
         if weight < 1:
@@ -268,7 +270,6 @@ class _Tenant:
         self.name = name
         self.executable = executable
         self.point_executables: Dict[str, Callable] = dict(point_executables or {})
-        self.policy = policy
         self.weight = int(weight)
         # the measurement side of the closed bucket loop: the executor feeds
         # per-bucket execution seconds in, the BucketPolicy reads them back
@@ -277,13 +278,23 @@ class _Tenant:
             max_batch=max_batch, max_wait=max_wait, queue_depth=queue_depth,
             buckets=buckets, clock=clock, signature=signature,
             packing=packing, latency=self.latency)
-        self.controller: Optional[SLOController] = None
-        if slo is not None:
+        # ONE point-selection surface: the legacy policy=/slo= pair is
+        # normalized into a PointSelector here, so the dispatch/feedback
+        # paths below speak only the protocol
+        if selector is not None:
+            if policy is not None or slo is not None:
+                raise ValueError(
+                    "pass either selector= or the legacy policy=/slo= pair, "
+                    "not both")
+        elif slo is not None:
             if policy is None:
                 raise ValueError(
                     "an SLO tenant needs a RuntimePolicy: its working points "
                     "are the precision ladder the controller walks")
-            self.controller = SLOController(policy.points, slo)
+            selector = SLOController(policy.points, slo)
+        else:
+            selector = policy
+        self.selector: Optional[PointSelector] = selector
         # per-ticket state (guarded by the server lock)
         self.results: Dict[int, Any] = {}
         self.dropped: set = set()
@@ -296,6 +307,17 @@ class _Tenant:
         self.reports: Deque[BatchReport] = deque(maxlen=history)
         self.latencies: Deque[float] = deque(maxlen=history)
         self.executed_batches = 0
+
+    # legacy views of the unified selector, kept for telemetry/test surfaces
+    @property
+    def controller(self) -> Optional[SLOController]:
+        sel = self.selector
+        return sel if isinstance(sel, SLOController) else None
+
+    @property
+    def policy(self) -> Optional[PointSelector]:
+        sel = self.selector
+        return None if isinstance(sel, SLOController) else sel
 
     def executables(self) -> List[Callable]:
         uniq, seen = [], set()
@@ -361,7 +383,7 @@ class AccelServer:
                  max_batch: int = 8, max_wait: float = 0.005,
                  queue_depth: int = 1024,
                  buckets: Optional[Sequence[int]] = None,
-                 policy: Optional[RuntimePolicy] = None,
+                 policy: Optional[PointSelector] = None,
                  point_executables: Optional[Dict[str, Callable]] = None,
                  clock: Callable[[], float] = time.monotonic,
                  history: int = 4096,
@@ -370,6 +392,7 @@ class AccelServer:
                  weight: int = 1,
                  slo: Optional[ServiceObjective] = None,
                  latency: Optional[LatencyEWMA] = None,
+                 selector: Optional[PointSelector] = None,
                  pipeline_depth: int = 2):
         self.clock = clock
         self.pipeline_depth = max(0, int(pipeline_depth))
@@ -393,7 +416,7 @@ class AccelServer:
                             point_executables=point_executables,
                             signature=signature, packing=packing,
                             weight=weight, slo=slo, latency=latency,
-                            history=history)
+                            selector=selector, history=history)
 
     # -- tenant registry -----------------------------------------------------
     def add_tenant(self, name: str, executable: Callable, **kwargs) -> str:
@@ -404,7 +427,9 @@ class AccelServer:
         ``policy``, ``point_executables``, ``signature``, ``packing``,
         ``weight`` (QoS: batches per WRR cycle while backlogged), ``slo`` (a
         :class:`~repro.core.adaptive.ServiceObjective` — requires a
-        ``policy`` whose points form the precision ladder), ``latency`` and
+        ``policy`` whose points form the precision ladder), ``latency``,
+        ``selector`` (any :class:`~repro.core.adaptive.PointSelector` — the
+        unified surface; mutually exclusive with ``policy``/``slo``) and
         ``history``."""
         with self._lock:
             if name in self.tenants:
@@ -440,8 +465,12 @@ class AccelServer:
         return self._default.point_executables
 
     @property
-    def policy(self) -> Optional[RuntimePolicy]:
+    def policy(self) -> Optional[PointSelector]:
         return self._default.policy
+
+    @property
+    def selector(self) -> Optional[PointSelector]:
+        return self._default.selector
 
     @property
     def reports(self) -> Deque[BatchReport]:
@@ -518,12 +547,10 @@ class AccelServer:
     def _select(self, ten: _Tenant, batch: ScheduledBatch
                 ) -> Tuple[Callable, Optional[str], Optional[int]]:
         exe, point, pt = ten.executable, None, None
-        if ten.controller is not None:
-            # closed loop: the SLO controller's measured-latency choice
-            # overrides the open-loop energy-budget heuristic
-            pt = ten.controller.select()
-        elif ten.policy is not None:
-            pt = ten.policy.select(batch.budget)
+        if ten.selector is not None:
+            # one protocol call: open-loop selectors read the batch budget,
+            # closed-loop ones (SLOController) ignore it and use observe()
+            pt = ten.selector.select(batch.budget)
         if pt is not None:
             point = pt.name
             exe = ten.point_executables.get(pt.name, exe)
@@ -573,8 +600,8 @@ class AccelServer:
                                   sliced if pending.multi else sliced[0])
                     lat = done - r.arrival
                     ten.latencies.append(lat)
-                    if ten.controller is not None:
-                        ten.controller.observe(lat)
+                    if ten.selector is not None:
+                        ten.selector.observe(lat)
                 off += r.size
             # close the bucket loop: this bucket's measured execution time
             ten.latency.observe(batch.bucket, exec_s)

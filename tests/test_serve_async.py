@@ -412,6 +412,94 @@ def test_slo_requires_policy():
 
 
 # ---------------------------------------------------------------------------
+# unified selector surface: selector= equals the legacy policy=/slo= pair,
+# and a computed ParetoFront drives the same closed loop
+# ---------------------------------------------------------------------------
+
+
+def _drive_slo_trajectory(srv, pressure):
+    """The canonical downshift-then-recover trajectory against a server."""
+
+    def serve_one():
+        tk = srv.submit(np.ones((4, 3), np.float32))
+        srv.pump(flush=True)
+        srv.result(tk)
+
+    for _ in range(12):
+        serve_one()
+    pressure["on"] = False
+    for _ in range(12):
+        serve_one()
+    return [r.bits for r in srv.reports]
+
+
+def test_selector_kwarg_matches_legacy_policy_slo_pair():
+    """selector=SLOController(...) reproduces the policy=/slo= trajectory
+    bit-for-bit: the legacy pair is sugar over the one selector slot."""
+    slo_kw = dict(p95_latency_s=1.0, window=4, min_samples=4, hold=4,
+                  recover_margin=0.5)
+    traces = []
+    for style in ("legacy", "selector"):
+        clock = FakeClock()
+        pressure = {"on": True}
+        exes = {p.name: BitsExe(p.weight_bits, clock, pressure)
+                for p in POINTS}
+        kw = (dict(policy=RuntimePolicy(POINTS),
+                   slo=ServiceObjective(**slo_kw)) if style == "legacy"
+              else dict(selector=SLOController(
+                  POINTS, ServiceObjective(**slo_kw))))
+        srv = AccelServer(exes["w8"], max_batch=4, max_wait=0.0, clock=clock,
+                          point_executables=exes, **kw)
+        traces.append(_drive_slo_trajectory(srv, pressure))
+        assert srv._default.controller is srv.selector   # legacy view intact
+    assert traces[0] == traces[1]
+    assert traces[0] == [8] * 4 + [4] * 4 + [2] * 8 + [4] * 4 + [8] * 4
+
+
+def test_selector_excludes_legacy_pair():
+    sel = SLOController(POINTS, ServiceObjective(p95_latency_s=1.0))
+    with pytest.raises(ValueError, match="not both"):
+        AccelServer(Recorder(), selector=sel, policy=RuntimePolicy(POINTS))
+    with pytest.raises(ValueError, match="not both"):
+        AccelServer(Recorder(), selector=sel,
+                    slo=ServiceObjective(p95_latency_s=1.0))
+
+
+def test_slo_loop_walks_a_computed_pareto_front():
+    """The DSE acceptance loop: an explorer-shaped ParetoFront (not the
+    hardcoded ladder) feeds serve-time selection, and the SLO controller
+    demonstrably shifts across the front's own points."""
+    from repro.dse import ParetoFront, ParetoPoint
+
+    def ppt(name, bits, wb, lat, agree):
+        return ParetoPoint(WorkingPoint(name, bits, act_bits=8),
+                           weight_bytes=wb, fifo_bytes=64, scratch_bytes=0,
+                           predicted_latency_s=lat, agreement=agree)
+
+    front = ParetoFront("toy", [ppt("w8", 8, 300, 3e-6, 1.0),
+                                ppt("w4", 4, 150, 2e-6, 0.9),
+                                ppt("w2", 2, 80, 1e-6, 0.6)])
+    # the front round-trips through its wire format before serving, exactly
+    # as a deployment loading a committed front artifact would
+    front = ParetoFront.from_json(front.to_json())
+    clock = FakeClock()
+    pressure = {"on": True}
+    exes = {p.name: BitsExe(p.weight_bits, clock, pressure)
+            for p in front.working_points()}
+    sel = front.selector(ServiceObjective(p95_latency_s=1.0, window=4,
+                                          min_samples=4, hold=4,
+                                          recover_margin=0.5))
+    srv = AccelServer(exes["w8"], max_batch=4, max_wait=0.0, clock=clock,
+                      point_executables=exes, selector=sel)
+    bits = _drive_slo_trajectory(srv, pressure)
+    assert bits == [8] * 4 + [4] * 4 + [2] * 8 + [4] * 4 + [8] * 4
+    assert sel.shifts == [("w8", "w4"), ("w4", "w2"),
+                          ("w2", "w4"), ("w4", "w8")]
+    tel = srv.stats()["slo"]
+    assert tel["point"] == "w8" and len(tel["shifts"]) == 4
+
+
+# ---------------------------------------------------------------------------
 # telemetry shapes
 # ---------------------------------------------------------------------------
 
