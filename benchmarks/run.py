@@ -9,6 +9,7 @@
   serve_throughput        - coalesced vs naive per-request serving
   qpath_latency           - fake-quant f32 vs packed-kernel execution path
   dse_pareto              - resource-constrained Pareto fronts of working points
+  fleet_chaos             - replicated serving under injected faults
   roofline                - §Roofline table aggregated from dry-run artifacts
 """
 from __future__ import annotations
@@ -38,8 +39,8 @@ def main() -> None:
             failures.append((name, repr(e)))
             traceback.print_exc()
 
-    from benchmarks import (adaptive_switch, dse_pareto, qpath_latency,
-                            roofline_table, serve_throughput,
+    from benchmarks import (adaptive_switch, dse_pareto, fleet_chaos,
+                            qpath_latency, roofline_table, serve_throughput,
                             table1_frameworks, table2_mixed_precision)
 
     section("table1_frameworks", lambda: [
@@ -61,6 +62,9 @@ def main() -> None:
     section("dse_pareto", lambda: [
         print("dse_pareto," + ",".join(f"{k}={v}" for k, v in r.items()))
         for r in dse_pareto.run(full)])
+    section("fleet_chaos", lambda: print(
+        "fleet_chaos," + ",".join(f"{k}={v}"
+                                  for k, v in fleet_chaos.run(full).items())))
     section("roofline", roofline_table.main)
 
     if failures:

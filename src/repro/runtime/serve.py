@@ -39,9 +39,16 @@ from repro.sharding import batch_axes
 
 __all__ = [
     "AccelServer", "AdaptiveLMServer", "BatchReport", "QueueFull",
-    "ServeMetrics", "ServiceObjective", "Ticket", "decode_state_shardings",
-    "greedy_generate", "make_decode_step", "make_prefill_step",
+    "ServeMetrics", "ServerStopped", "ServiceObjective", "Ticket",
+    "decode_state_shardings", "greedy_generate", "make_decode_step",
+    "make_prefill_step",
 ]
+
+
+class ServerStopped(RuntimeError):
+    """Typed shutdown error: the server stopped (or its stop timed out)
+    before this request was served.  Callers that retry elsewhere (the fleet
+    router) can distinguish it from an execution failure."""
 
 
 def decode_state_shardings(cfg: ModelConfig, state, mesh: Mesh):
@@ -227,6 +234,12 @@ class Ticket:
         """True once the request resolved (result or error ready)."""
         return self._event.is_set()
 
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the ticket resolves (True) or ``timeout`` elapses
+        (False) without claiming the result — the fleet router's hedging
+        loop waits on several replicas' tickets this way."""
+        return self._event.wait(timeout)
+
     def result(self, timeout: Optional[float] = None):
         return self._server.result(self, timeout=timeout)
 
@@ -403,6 +416,7 @@ class AccelServer:
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
         self._thread: Optional[threading.Thread] = None
+        self._ever_started = False
         self._stopping = False
         self._drain_on_stop = True
         self._fatal: Optional[BaseException] = None
@@ -681,6 +695,7 @@ class AccelServer:
                     "server pump died; create a fresh server") from self._fatal
             self._stopping = False
             self._drain_on_stop = True
+            self._ever_started = True
             self._thread = threading.Thread(
                 target=self._pump_loop, name="accel-server-pump", daemon=True)
             self._thread.start()
@@ -689,22 +704,41 @@ class AccelServer:
     def stop(self, drain: bool = True, timeout: Optional[float] = None) -> None:
         """Stop the pump thread.  ``drain=True`` (default) serves everything
         still queued first; ``drain=False`` abandons the queues, resolving
-        their tickets with an error so no caller blocks forever."""
+        their tickets with an error so no caller blocks forever.
+
+        A ``timeout`` that expires with the pump still running (a hung device
+        call, a wedged executable) marks the server fatal, resolves *every*
+        outstanding and queued ticket with a typed :class:`ServerStopped`
+        error — no caller may block on a pump that will never answer — and
+        then raises.  Repeated ``stop()`` calls are safe no-ops."""
         with self._cond:
             t = self._thread
-            if t is None:
-                return
+            if t is None or self._fatal is not None:
+                return   # never started, already stopped, or already fatal
             self._stopping = True
             self._drain_on_stop = drain
             self._cond.notify_all()
         t.join(timeout)
         if t.is_alive():
+            # the pump is wedged: its tickets can never be served.  Resolve
+            # them all with the typed shutdown error (idempotently — if the
+            # pump un-wedges later, already-resolved rids are left alone) and
+            # refuse further work so a repeated stop() is a no-op.
+            err = ServerStopped(
+                f"pump thread did not exit within {timeout}s; outstanding "
+                "tickets resolved with this error")
+            with self._cond:
+                self._fatal = err
+                self.pump_errors.append(err)
+                self._resolve_all_outstanding(err)
+                self._cond.notify_all()
             raise RuntimeError("pump thread did not exit within timeout")
         with self._cond:
             self._thread = None
             self._stopping = False
             if not drain and self._fatal is None:
-                err = RuntimeError("server stopped before serving this request")
+                err = ServerStopped(
+                    "server stopped before serving this request")
                 for ten in self.tenants.values():
                     for r in ten.scheduler.abandon():
                         if r.rid in ten.dropped:
@@ -718,6 +752,34 @@ class AccelServer:
     def __exit__(self, *exc) -> None:
         self.stop(drain=True)
 
+    # -- fleet hooks (health probes / drain / brownout) ----------------------
+    @property
+    def alive(self) -> bool:
+        """True while the background pump thread is running and the server
+        has not failed fatally — the fleet router's aliveness probe."""
+        t = self._thread
+        return self._fatal is None and t is not None and t.is_alive()
+
+    @property
+    def fatal(self) -> Optional[BaseException]:
+        """The error that killed the pump (None while healthy)."""
+        return self._fatal
+
+    def queue_depth(self) -> int:
+        """Total queued requests across all tenants — the fleet brownout
+        selector's backlog signal."""
+        with self._lock:
+            return sum(len(t.scheduler) for t in self.tenants.values())
+
+    def set_selector(self, selector: Optional[PointSelector],
+                     tenant: str = "default") -> None:
+        """Swap a tenant's point selector at runtime.  The fleet router uses
+        this to wire ONE shared :class:`~repro.core.adaptive.BrownoutSelector`
+        into every replica so the whole fleet walks the precision ladder
+        together."""
+        with self._lock:
+            self._tenant(tenant).selector = selector
+
     def _any_queued(self) -> bool:
         return any(len(t.scheduler) for t in self.tenants.values())
 
@@ -730,8 +792,14 @@ class AccelServer:
         try:
             while True:
                 with self._cond:
-                    while not self._stopping and not self._any_queued():
+                    while (not self._stopping and self._fatal is None
+                           and not self._any_queued()):
                         self._cond.wait(timeout=self._poll_s())
+                    if self._fatal is not None:
+                        # a timed-out stop() already resolved every ticket
+                        # and marked the server dead: a late-unwedged pump
+                        # must not keep serving a server callers gave up on
+                        return
                     if self._stopping and (not self._drain_on_stop
                                            or not self._any_queued()):
                         return
@@ -778,21 +846,28 @@ class AccelServer:
             self._fail_batch(pending.tenant, pending.batch, e)
             self.pump_errors.append(e)
 
+    def _resolve_all_outstanding(self, err: BaseException) -> None:
+        """Resolve every outstanding and queued ticket with ``err`` (caller
+        holds the lock).  Idempotent: already-resolved rids keep their
+        results, so a wedged pump that finishes late cannot double-resolve
+        split-parent bookkeeping."""
+        for ten in self.tenants.values():
+            ten.scheduler.abandon()
+            for rid in list(ten.child_parent):
+                if rid not in ten.results:
+                    self._resolve(ten, rid, _BatchFailure(err))
+            for rid, tk in list(ten.tickets.items()):
+                if rid not in ten.split and rid not in ten.results:
+                    self._resolve(ten, rid, _BatchFailure(err))
+                tk._event.set()
+
     def _die(self, err: BaseException) -> None:
         """Pump-thread crash: resolve EVERY outstanding and queued ticket
         with the error so no caller blocks forever, and refuse new work."""
         with self._cond:
             self._fatal = err
             self.pump_errors.append(err)
-            for ten in self.tenants.values():
-                ten.scheduler.abandon()
-                for rid in list(ten.child_parent):
-                    if rid not in ten.results:
-                        self._resolve(ten, rid, _BatchFailure(err))
-                for rid, tk in list(ten.tickets.items()):
-                    if rid not in ten.split and rid not in ten.results:
-                        self._resolve(ten, rid, _BatchFailure(err))
-                    tk._event.set()
+            self._resolve_all_outstanding(err)
             self._cond.notify_all()
 
     # -- results -------------------------------------------------------------
@@ -813,10 +888,31 @@ class AccelServer:
         resident."""
         ten, rid = self._locate(ticket)
         if isinstance(ticket, Ticket) and self._thread is not None:
-            if not ticket._event.wait(timeout):
-                raise TimeoutError(
-                    f"ticket {rid} (tenant {ten.name!r}) not served "
-                    f"within {timeout}s")
+            # wait in bounded slices, re-checking pump liveness: a pump
+            # thread that died without resolving this ticket (a crashed
+            # start, a wedged stop) must fail fast instead of blocking a
+            # timeout=None caller forever
+            deadline = (None if timeout is None
+                        else time.monotonic() + timeout)
+            while not ticket._event.is_set():
+                with self._lock:
+                    th, stopping = self._thread, self._stopping
+                if th is None:
+                    break   # pump stopped meanwhile: sync claim below
+                if not th.is_alive() and not stopping:
+                    raise RuntimeError(
+                        f"ticket {rid} (tenant {ten.name!r}) cannot be "
+                        "served: the background pump thread is not running "
+                        "(it exited without resolving this ticket); create "
+                        "a fresh server and resubmit")
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"ticket {rid} (tenant {ten.name!r}) not served "
+                        f"within {timeout}s")
+                ticket._event.wait(0.05 if remaining is None
+                                   else min(0.05, remaining))
         return self._claim(ten, rid)
 
     def _claim(self, ten: _Tenant, rid: int):
@@ -831,14 +927,20 @@ class AccelServer:
                     parts.append(self._claim(ten, c))
             except Exception:
                 # a chunk claim failed: release every unclaimed chunk so no
-                # output stays resident forever.  The raising chunk is
-                # included — its pump may have re-raised a DIFFERENT batch's
-                # failure while this chunk was still queued, in which case it
-                # was never consumed; if it WAS consumed the drop leaves at
-                # most a stale rid in the dropped set (never an array).
+                # output stays resident forever, and unwind the parent's
+                # split bookkeeping.  A still-queued chunk (child_parent
+                # entry alive) is marked dropped so its output is discarded
+                # at demux; a resolved-but-unclaimed chunk has its result
+                # popped; a chunk with NO remaining state was already fully
+                # consumed (the raising chunk's usual fate) — dropping it
+                # would only grow the dropped set with a rid that can never
+                # be demuxed again, so it is skipped.
                 with self._lock:
+                    ten.parent_left.pop(rid, None)
                     for c in children[len(parts):]:
-                        self._drop_rid(ten, c)
+                        queued = ten.child_parent.pop(c, None) is not None
+                        if queued or c in ten.results or c in ten.tickets:
+                            self._drop_rid(ten, c)
                 raise
             if parts and isinstance(parts[0], tuple):
                 return tuple(np.concatenate(col) for col in zip(*parts))
@@ -858,9 +960,22 @@ class AccelServer:
                         if rid not in ten.results:
                             raise
         with self._lock:
-            res = ten.results.pop(rid)
+            if rid not in ten.results and rid in ten.tickets:
+                # a live ticket with no result and nobody pumping: name the
+                # un-started pump instead of a bare KeyError (or blocking a
+                # caller forever on a pump nobody is running)
+                state = ("was never start()ed"
+                         if not self._ever_started else "is not running")
+                raise RuntimeError(
+                    f"ticket {rid} (tenant {ten.name!r}) is unresolved and "
+                    f"the background pump {state}; a synchronous pump did "
+                    "not produce it (taken by a concurrent pump?) — "
+                    "start() the server or retry")
+            res = ten.results.pop(rid)   # double claim / dropped: KeyError
             ten.tickets.pop(rid, None)
         if isinstance(res, _BatchFailure):
+            if isinstance(res.error, ServerStopped):
+                raise res.error    # typed shutdown must survive the claim
             raise RuntimeError(
                 f"batch execution failed for ticket {rid}: {res.error}"
             ) from res.error

@@ -76,6 +76,65 @@ def test_straggler_watchdog_history_is_bounded():
     assert wd.flagged == [10_000]
 
 
+def test_injector_rate_mode_is_seeded_and_counted():
+    def draws(seed):
+        inj = ft.FailureInjector(rate=0.3, seed=seed)
+        out = []
+        for step in range(50):
+            try:
+                inj.maybe_fail(step)
+                out.append(False)
+            except RuntimeError:
+                out.append(True)
+        return out, inj.injected_failures
+
+    a, na = draws(seed=7)
+    b, nb = draws(seed=7)
+    c, nc = draws(seed=8)
+    assert a == b and na == nb          # same seed -> same fault sequence
+    assert a != c                        # different seed -> different faults
+    assert na == sum(a) > 0
+
+
+def test_injector_delay_modes():
+    slept = []
+    inj = ft.FailureInjector(delay_at=[3], delay_s=0.25, sleep=slept.append)
+    assert not inj.maybe_delay(2)
+    assert inj.maybe_delay(3)
+    assert not inj.maybe_delay(3)        # fire-once, like fail_at
+    assert slept == [0.25]
+    assert inj.injected_delays == 1
+    # seeded probabilistic delays, independent of the failure stream
+    slept2 = []
+    inj2 = ft.FailureInjector(rate=0.0, delay_rate=0.5, delay_s=0.01,
+                              seed=3, sleep=slept2.append)
+    hits = sum(inj2.maybe_delay(s) for s in range(100))
+    assert hits == len(slept2) == inj2.injected_delays
+    assert 20 < hits < 80                # seeded draw near the configured rate
+
+
+def test_injector_fail_at_api_unchanged():
+    inj = ft.FailureInjector(fail_at=[2])
+    inj.maybe_fail(1)
+    try:
+        inj.maybe_fail(2)
+        assert False, "should have raised"
+    except RuntimeError:
+        pass
+    inj.maybe_fail(2)                    # fire-once: second pass is clean
+    assert inj.fired == {2}
+
+
+def test_injector_validates_config():
+    import pytest
+    with pytest.raises(ValueError):
+        ft.FailureInjector(rate=1.5)
+    with pytest.raises(ValueError):
+        ft.FailureInjector(delay_rate=-0.1)
+    with pytest.raises(ValueError):
+        ft.FailureInjector(delay_s=-1.0)
+
+
 def test_failure_mid_save_keeps_last_good_checkpoint(tmp_path):
     """Atomic rename: a .tmp dir never shadows the last good step."""
     from repro.ckpt import checkpoint as ckpt

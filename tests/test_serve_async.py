@@ -293,6 +293,76 @@ def test_sync_failed_batch_still_raises_and_resolves():
         srv.result(tk)
 
 
+class FailNthCall:
+    """Executable that fails on exactly the given 0-based call indices."""
+
+    def __init__(self, fail_calls, tag=0.0):
+        self.fail_calls = set(fail_calls)
+        self.n = 0
+        self._lock = threading.Lock()
+
+    def __call__(self, x):
+        with self._lock:
+            i = self.n
+            self.n += 1
+        if i in self.fail_calls:
+            raise RuntimeError(f"injected failure on call {i}")
+        return np.asarray(x) * 2.0
+
+
+def test_split_chunk_failure_resolves_parent_and_releases_siblings_async():
+    # an oversize submit splits into 3 chunks; the MIDDLE chunk's batch
+    # fails mid-flight.  The ONE parent ticket must resolve with the
+    # failure and every sibling chunk must be released — no resident
+    # outputs, no dangling split state, no hung waiter.
+    srv = AccelServer(FailNthCall([1]), max_batch=4, max_wait=0.001)
+    with srv:
+        big = np.arange(11 * 3, dtype=np.float32).reshape(11, 3)
+        tk = srv.submit(big)
+        with pytest.raises(RuntimeError, match="injected failure"):
+            tk.result(timeout=10)
+        # the failure was contained to the batch: pump alive, server usable
+        assert srv.alive and srv._fatal is None
+        out = srv.submit(*vals(1)).result(timeout=10)
+        assert float(out[0, 0]) == 0.0
+    assert not srv._results and not srv._split and not srv._dropped
+    assert not srv._default.parent_left and not srv._default.child_parent
+
+
+def test_split_chunk_failure_releases_siblings_sync():
+    srv = AccelServer(FailNthCall([0]), max_batch=4, max_wait=0.0)
+    big = np.arange(10 * 3, dtype=np.float32).reshape(10, 3)
+    tk = srv.submit(big)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        srv.pump(flush=True)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        srv.result(tk)
+    # the sibling chunks were still queued when the claim raised; once the
+    # pump flushes them their (dropped) outputs are discarded at demux and
+    # every piece of split bookkeeping unwinds
+    srv.pump(flush=True)
+    assert not srv._results and not srv._split and not srv._dropped
+    assert not srv._default.parent_left and not srv._default.child_parent
+
+
+def test_split_failure_does_not_poison_other_requests():
+    # a failing split must not take down traffic in OTHER batches: only the
+    # batch containing the failing call is lost
+    exe = FailNthCall([0])
+    srv = AccelServer(exe, max_batch=4, max_wait=0.0)
+    big = np.arange(9 * 3, dtype=np.float32).reshape(9, 3)
+    a = np.full((2, 3), 500.0, np.float32)
+    tbig = srv.submit(big)       # chunks dispatch first: call 0 fails
+    ta = srv.submit(a)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        srv.pump(flush=True)
+    srv.pump(flush=True)         # remaining batches (incl. a's) execute
+    np.testing.assert_allclose(srv.result(ta), a * 2.0)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        srv.result(tbig)
+    assert not srv._results and not srv._split and not srv._dropped
+
+
 # ---------------------------------------------------------------------------
 # closed loop 1: measured per-bucket latency drives bucket selection
 # ---------------------------------------------------------------------------
