@@ -271,7 +271,13 @@ class Replica:
 
 @dataclass
 class _Attempt:
+    """One in-flight submission.  ``server`` is the exact AccelServer
+    instance the ticket was submitted to: a replica may be healed (rebuilt)
+    while the attempt is outstanding, and the fresh server restarts its rid
+    counter — settling against ``replica.server`` could then claim or drop
+    an UNRELATED request's result on the new generation."""
     replica: Replica
+    server: AccelServer
     ticket: Ticket
     t0: float
     hedge: bool = False
@@ -287,7 +293,7 @@ class FleetTicket:
 
     __slots__ = ("rid", "inputs", "budget", "tenant", "deadline", "_router",
                  "live", "attempts", "hedges", "retries_left", "_terminal",
-                 "_claimed", "_result_value")
+                 "_claimed", "_resolving", "_result_value")
 
     def __init__(self, router: "FleetRouter", rid: int, inputs: tuple,
                  budget: float, tenant: str, deadline: float):
@@ -303,6 +309,7 @@ class FleetTicket:
         self.retries_left = router.retries
         self._terminal: Optional[Exception] = None
         self._claimed = False
+        self._resolving = False
 
     def done(self) -> bool:
         return (self._terminal is not None or self._claimed
@@ -467,22 +474,31 @@ class FleetRouter:
     def _dispatch(self, ft: FleetTicket, exclude: Set[str] = frozenset(),
                   hedge: bool = False) -> _Attempt:
         """Route + submit one attempt; raises NoReplicaAvailable when every
-        routable replica rejected it (shed, not queued)."""
-        tried = set(exclude)
+        routable replica rejected it (shed, not queued).
+
+        ``exclude`` is a soft preference (avoid the replica that just
+        failed); it is relaxed once when nobody else is routable.  A replica
+        that REJECTED during this dispatch pass (queue-full / dead pump) is
+        a hard exclusion — it is never re-tried within the pass, so a fleet
+        whose every queue is full sheds instead of busy-spinning."""
+        tried: Set[str] = set()      # hard: rejected during THIS pass
+        avoid = set(exclude)         # soft: retry-ring preference
         while True:
             with self._lock:
-                rep = self._route(tried)
-                if rep is None and tried > set(exclude):
-                    rep = self._route(set(exclude))   # retry ring exhausted
-                if rep is None and exclude:
-                    rep = self._route(frozenset())    # any port in a storm
-            if rep is None:
+                rep = self._route(tried | avoid)
+                if rep is None and avoid:
+                    avoid = set()                 # any port in a storm
+                    rep = self._route(tried)
+                # bind to the exact server instance we submit to: rep.server
+                # may be swapped by a heal while this attempt is in flight
+                srv = rep.server if rep is not None else None
+            if rep is None or srv is None:
                 raise NoReplicaAvailable(
                     f"no routable replica (states: "
                     f"{ {n: r.state.value for n, r in self.replicas.items()} })")
             try:
-                tk = rep.server.submit(*ft.inputs, budget=ft.budget,
-                                       tenant=ft.tenant)
+                tk = srv.submit(*ft.inputs, budget=ft.budget,
+                                tenant=ft.tenant)
             except QueueFull:
                 tried.add(rep.name)           # backpressure: try a sibling
                 continue
@@ -490,13 +506,13 @@ class FleetRouter:
                 # dead pump hit between health checks: score + try a sibling
                 with self._lock:
                     rep.record_failure()
-                    if rep.server is not None and rep.server.fatal is not None:
+                    if rep.server is srv and srv.fatal is not None:
                         self._eject(rep)
                 tried.add(rep.name)
                 continue
             with self._lock:
                 rep.outstanding += 1
-                att = _Attempt(rep, tk, time.monotonic(), hedge)
+                att = _Attempt(rep, srv, tk, time.monotonic(), hedge)
                 ft.live.append(att)
                 ft.attempts += 1
                 if hedge:
@@ -541,12 +557,12 @@ class FleetRouter:
             if att is keep:
                 continue
             att.replica.outstanding = max(0, att.replica.outstanding - 1)
-            srv = att.replica.server
-            if srv is not None:
-                try:
-                    srv.drop(att.ticket)
-                except Exception:       # dead server: nothing left to drop
-                    pass
+            try:
+                # always the server the ticket was SUBMITTED to — a healed
+                # replica's fresh server reuses rids for other requests
+                att.server.drop(att.ticket)
+            except Exception:           # dead server: nothing left to drop
+                pass
         ft.live = [keep] if keep is not None else []
 
     def _terminate(self, ft: FleetTicket, err: Exception) -> None:
@@ -564,12 +580,26 @@ class FleetRouter:
         on a different replica with backoff+jitter, optional hedging — and
         is GUARANTEED to return or raise by ``min(deadline, timeout)``:
         a fleet ticket can time out (claimable again later) but never hang.
+
+        Single consumption, like AccelServer: a second ``result()`` call —
+        after a claim OR concurrently with another resolving thread —
+        raises ``KeyError`` rather than racing on the attempt list.
         """
         ft = ticket
-        if ft._terminal is not None:
-            raise ft._terminal
-        if ft._claimed:
-            raise KeyError(ft.rid)   # single consumption, like AccelServer
+        with self._lock:
+            if ft._terminal is not None:
+                raise ft._terminal
+            if ft._claimed or ft._resolving:
+                raise KeyError(ft.rid)
+            ft._resolving = True
+        try:
+            return self._resolve(ft, timeout)
+        finally:
+            # a TimeoutError exit leaves the ticket claimable again; a
+            # claim / terminal exit is already recorded on the ticket
+            ft._resolving = False
+
+    def _resolve(self, ft: FleetTicket, timeout: Optional[float]):
         caller_deadline = (None if timeout is None
                            else time.monotonic() + timeout)
         while True:
@@ -627,7 +657,7 @@ class FleetRouter:
         dispatched."""
         rep = att.replica
         try:
-            val = rep.server.result(att.ticket, timeout=self.probe_timeout_s)
+            val = att.server.result(att.ticket, timeout=self.probe_timeout_s)
         except TimeoutError:
             return False               # raced done(): just poll again
         except Exception as e:
@@ -635,8 +665,10 @@ class FleetRouter:
                 rep.outstanding = max(0, rep.outstanding - 1)
                 ft.live.remove(att)
                 rep.record_failure()
-                fatal = rep.server is None or rep.server.fatal is not None
-                if fatal:
+                # eject only when the CURRENT server is the one that died —
+                # a failure from a pre-heal generation must not eject the
+                # freshly rebuilt replica
+                if rep.server is att.server and att.server.fatal is not None:
                     self._eject(rep)
                 elif (rep.err_ewma > ERR_SUSPECT or rep.breaker.open) \
                         and rep.state == HealthState.HEALTHY:
@@ -727,11 +759,19 @@ class FleetRouter:
             self.probes += 1
         if self.probe_inputs is None:
             return True                 # aliveness-only probe
+        tk = None
         try:
             tk = srv.submit(*self.probe_inputs)
             srv.result(tk, timeout=self.probe_timeout_s)
             return True
         except Exception:
+            if tk is not None:
+                try:
+                    # release the canary so repeated probes of a persistently
+                    # suspect replica never accumulate unclaimed results
+                    srv.drop(tk)
+                except Exception:       # dead server / already consumed
+                    pass
             return False
 
     def _sentinel_loop(self) -> None:

@@ -347,6 +347,177 @@ def test_fleet_sheds_when_no_replica_routable():
         assert r.stats()["shed"] == 1
 
 
+def test_fleet_sheds_when_every_queue_is_full():
+    # all routable replicas rejecting with QueueFull must raise a typed
+    # NoReplicaAvailable (shed), not busy-spin re-routing forever
+    gate = threading.Event()
+
+    def wedged(x):
+        gate.wait(10.0)
+        return np.asarray(x) * 2.0
+
+    r = make_router({"a": make_factory(wedged, queue_depth=1),
+                     "b": make_factory(wedged, queue_depth=1)},
+                    probe=None)
+    out = {}
+
+    def fill():
+        try:
+            for v in vals(10):     # > pump slots + queue slots of the fleet
+                r.submit(v)
+            out["err"] = None
+        except NoReplicaAvailable as e:
+            out["err"] = e
+
+    try:
+        with r:
+            th = threading.Thread(target=fill, daemon=True)
+            th.start()
+            th.join(5.0)
+            assert not th.is_alive(), \
+                "submit busy-spun on full queues instead of shedding"
+            assert isinstance(out["err"], NoReplicaAvailable)
+            assert r.stats()["shed"] == 1
+    finally:
+        gate.set()
+
+
+def test_stale_attempt_never_touches_a_healed_servers_tickets():
+    # an attempt outstanding across a heal must settle against the server
+    # GENERATION it was submitted to: the rebuilt server restarts its rid
+    # counter, so settling against rep.server would claim/drop an unrelated
+    # request's result on the new generation
+    gate = threading.Event()
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def slow_first(x):
+        with lock:
+            calls["n"] += 1
+            first = calls["n"] == 1
+        if first:
+            gate.wait(10.0)       # only generation 1's first batch wedges
+        return np.asarray(x) * 2.0
+
+    r = make_router({"a": make_factory(slow_first)}, probe=None, retries=0)
+    try:
+        with r:
+            rep = r.replicas["a"]
+            old_srv = rep.server
+            v0, v1 = vals(2)
+            t1 = r.submit(v0)     # rid 0 on generation 1, wedged in-flight
+            deadline = time.monotonic() + 5.0
+            while time.monotonic() < deadline and calls["n"] < 1:
+                time.sleep(0.005)
+            with r._lock:
+                r._build_server(rep)          # heal: fresh pump, rids reset
+            assert rep.server is not old_srv
+            t2 = r.submit(v1)     # rid 0 again — on generation 2
+            gate.set()
+            # each ticket must claim from ITS OWN generation's server
+            np.testing.assert_allclose(t1.result(timeout=10), 2.0 * v0)
+            np.testing.assert_allclose(t2.result(timeout=10), 2.0 * v1)
+            old_srv.stop(drain=False, timeout=2.0)
+    finally:
+        gate.set()
+
+
+def test_fleet_drop_releases_only_its_own_generation():
+    # drop() of a pre-heal ticket must not discard the rid-colliding request
+    # on the healed server
+    gate = threading.Event()
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def slow_first(x):
+        with lock:
+            calls["n"] += 1
+            first = calls["n"] == 1
+        if first:
+            gate.wait(10.0)
+        return np.asarray(x) * 2.0
+
+    r = make_router({"a": make_factory(slow_first)}, probe=None, retries=0)
+    try:
+        with r:
+            rep = r.replicas["a"]
+            old_srv = rep.server
+            v0, v1 = vals(2)
+            t1 = r.submit(v0)     # rid 0 on generation 1
+            with r._lock:
+                r._build_server(rep)
+            t2 = r.submit(v1)     # rid 0 on generation 2
+            r.drop(t1)            # must hit generation 1, not t2's ticket
+            np.testing.assert_allclose(t2.result(timeout=10), 2.0 * v1)
+            with pytest.raises(RequestFailed, match="dropped"):
+                t1.result(timeout=10)
+            gate.set()
+            old_srv.stop(drain=False, timeout=2.0)
+    finally:
+        gate.set()
+
+
+def test_probe_failure_drops_canary_ticket():
+    # a timed-out probe must release its canary so repeated probes of a
+    # persistently suspect replica never accumulate unclaimed results
+    gate = threading.Event()
+
+    def wedged(x):
+        gate.wait(10.0)
+        return np.asarray(x) * 2.0
+
+    r = make_router({"a": make_factory(wedged)}, probe_timeout_s=0.02,
+                    probe_interval_s=30.0)   # sentinel effectively quiet
+    try:
+        with r:
+            rep = r.replicas["a"]
+            srv = rep.server
+            for _ in range(3):
+                assert r._probe(rep) is False   # canary times out
+            gate.set()
+            deadline = time.monotonic() + 5.0
+            while time.monotonic() < deadline \
+                    and (srv.queue_depth() or srv._results):
+                time.sleep(0.01)
+            assert srv._results == {}   # canary outputs never stay resident
+    finally:
+        gate.set()
+
+
+def test_fleet_result_single_consumption_under_concurrency():
+    # concurrent result() calls on one fleet ticket: exactly one claims,
+    # the rest get the documented KeyError (no race on the attempt list)
+    gate = threading.Event()
+
+    def slow(x):
+        gate.wait(10.0)
+        return np.asarray(x) * 2.0
+
+    r = make_router({"a": make_factory(slow)}, probe=None)
+    try:
+        with r:
+            t = r.submit(*vals(1))
+            oks, errs = [], []
+
+            def claim():
+                try:
+                    oks.append(t.result(timeout=10))
+                except KeyError:
+                    errs.append("key")
+
+            ths = [threading.Thread(target=claim) for _ in range(4)]
+            for th in ths:
+                th.start()
+            time.sleep(0.05)      # let every thread reach the claim gate
+            gate.set()
+            for th in ths:
+                th.join(10.0)
+            assert len(oks) == 1 and len(errs) == 3
+            np.testing.assert_allclose(oks[0], 2.0 * vals(1)[0])
+    finally:
+        gate.set()
+
+
 def test_fleet_deadline_budget_is_typed():
     gate = threading.Event()
 
