@@ -10,6 +10,7 @@
   qpath_latency           - fake-quant f32 vs packed-kernel execution path
   dse_pareto              - resource-constrained Pareto fronts of working points
   fleet_chaos             - replicated serving under injected faults
+  integrity_sdc           - SDC detection/scrub/self-heal under bit-flip chaos
   roofline                - §Roofline table aggregated from dry-run artifacts
 """
 from __future__ import annotations
@@ -40,8 +41,9 @@ def main() -> None:
             traceback.print_exc()
 
     from benchmarks import (adaptive_switch, dse_pareto, fleet_chaos,
-                            qpath_latency, roofline_table, serve_throughput,
-                            table1_frameworks, table2_mixed_precision)
+                            integrity_sdc, qpath_latency, roofline_table,
+                            serve_throughput, table1_frameworks,
+                            table2_mixed_precision)
 
     section("table1_frameworks", lambda: [
         print("table1_frameworks," + ",".join(f"{k}={v}" for k, v in r.items()))
@@ -65,6 +67,10 @@ def main() -> None:
     section("fleet_chaos", lambda: print(
         "fleet_chaos," + ",".join(f"{k}={v}"
                                   for k, v in fleet_chaos.run(full).items())))
+    section("integrity_sdc", lambda: print(
+        "integrity_sdc," + ",".join(
+            f"{k}={v}" for k, v in integrity_sdc.run(full).items()
+            if k != "flips")))
     section("roofline", roofline_table.main)
 
     if failures:

@@ -19,6 +19,7 @@ directly: ``working_points()`` feeds ``shared_point_executables`` /
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -31,6 +32,36 @@ from repro.quant.qtypes import DatatypeConfig, PrecisionMap
 # bump on any front-layout change; `load` refuses mismatched files rather
 # than mis-reading them
 FRONT_SCHEMA = 1
+
+
+class FrontFormatError(ValueError):
+    """Typed deserialization failure: a front file carried wrong-typed,
+    non-finite, or negative metric fields.  Raised instead of letting
+    corrupted bytes/latency values propagate into ``run_kwargs()`` and
+    runtime block picks — a bit-flipped cache file must fail loudly."""
+
+
+def _req_int(d: Dict, key: str, *, minimum: int = 0) -> int:
+    """A required non-negative integral field (bool is NOT an int here)."""
+    v = d.get(key)
+    if isinstance(v, bool) or not isinstance(v, (int, float)) \
+            or not math.isfinite(v) or int(v) != v or int(v) < minimum:
+        raise FrontFormatError(
+            f"field {key!r} must be an integer >= {minimum}, got {v!r}")
+    return int(v)
+
+
+def _req_float(d: Dict, key: str, *, minimum: float = 0.0,
+               required: bool = True) -> Optional[float]:
+    """A finite non-negative float field (None allowed when optional)."""
+    v = d.get(key)
+    if v is None and not required:
+        return None
+    if isinstance(v, bool) or not isinstance(v, (int, float)) \
+            or not math.isfinite(v) or v < minimum:
+        raise FrontFormatError(
+            f"field {key!r} must be a finite number >= {minimum}, got {v!r}")
+    return float(v)
 
 
 @dataclass(frozen=True)
@@ -87,16 +118,28 @@ class ParetoPoint:
 
     @classmethod
     def from_dict(cls, d: Dict) -> "ParetoPoint":
-        wp = WorkingPoint(d["name"], int(d["weight_bits"]),
+        """Build from a JSON dict, rejecting corrupted metric fields
+        (non-finite, negative, or wrong-typed) with a typed
+        :class:`FrontFormatError` — garbage here would otherwise steer
+        ``run_kwargs()`` and runtime ladder picks silently."""
+        if not isinstance(d, dict):
+            raise FrontFormatError(f"point entry must be a dict, got "
+                                   f"{type(d).__name__}")
+        name = d.get("name")
+        if not isinstance(name, str) or not name:
+            raise FrontFormatError(f"field 'name' must be a non-empty "
+                                   f"string, got {name!r}")
+        wp = WorkingPoint(name, _req_int(d, "weight_bits", minimum=1),
                           d.get("act_dtype", "bfloat16"),
                           d.get("act_bits"))
         return cls(wp,
-                   weight_bytes=int(d["weight_bytes"]),
-                   fifo_bytes=int(d["fifo_bytes"]),
-                   scratch_bytes=int(d["scratch_bytes"]),
-                   predicted_latency_s=float(d["predicted_latency_s"]),
-                   agreement=float(d["agreement"]),
-                   measured_latency_s=d.get("measured_latency_s"))
+                   weight_bytes=_req_int(d, "weight_bytes"),
+                   fifo_bytes=_req_int(d, "fifo_bytes"),
+                   scratch_bytes=_req_int(d, "scratch_bytes"),
+                   predicted_latency_s=_req_float(d, "predicted_latency_s"),
+                   agreement=_req_float(d, "agreement"),
+                   measured_latency_s=_req_float(d, "measured_latency_s",
+                                                 required=False))
 
 
 def prune_dominated(points: Sequence[ParetoPoint]) -> List[ParetoPoint]:
@@ -191,8 +234,12 @@ class ParetoFront:
                 f"this build reads {FRONT_SCHEMA} — re-run the explorer")
         budget = (ResourceBudget.from_dict(d["budget"])
                   if d.get("budget") else None)
+        pts = d.get("points")
+        if not isinstance(pts, list):
+            raise FrontFormatError(
+                f"field 'points' must be a list, got {type(pts).__name__}")
         return cls(graph_name=d["graph"],
-                   points=[ParetoPoint.from_dict(p) for p in d["points"]],
+                   points=[ParetoPoint.from_dict(p) for p in pts],
                    act_bits=int(d.get("act_bits", 8)),
                    fifo_slack=float(d.get("fifo_slack", 1.0)),
                    per_layer_bits={k: int(v) for k, v in

@@ -30,6 +30,27 @@ CACHE_SCHEMA = 2
 
 AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 
+
+class CacheFormatError(ValueError):
+    """Typed validation failure for autotune-cache entries: block tuples
+    must be non-empty sequences of positive integers (bool is not an int
+    here, and floats/NaN/negatives are rejected) — a corrupted block pick
+    would otherwise propagate straight into Pallas grid shapes."""
+
+
+def _valid_blocks(v: object) -> Tuple[int, ...]:
+    """Validate one cache value; raises :class:`CacheFormatError`."""
+    if not isinstance(v, (list, tuple)) or len(v) < 1:
+        raise CacheFormatError(
+            f"cache entry must be a non-empty block list, got {v!r}")
+    blocks = []
+    for b in v:
+        if isinstance(b, bool) or not isinstance(b, int) or b <= 0:
+            raise CacheFormatError(
+                f"block sizes must be positive integers, got {b!r} in {v!r}")
+        blocks.append(int(b))
+    return tuple(blocks)
+
 # loaded disk state: {"path": resolved path or None, "data": {key: blocks}};
 # re-resolved when the env var changes (tests point it at tmp dirs).  The
 # dict OBJECT is shared by identity with the per-family ops modules.
@@ -61,9 +82,18 @@ def disk_cache() -> Dict[str, Tuple[int, ...]]:
                 # schema gate: flat pre-versioned files and future formats
                 # both load as empty -> retune rather than mis-shape blocks
                 if isinstance(raw, dict) and raw.get("schema") == CACHE_SCHEMA:
-                    data = {str(k): tuple(int(b) for b in v)
-                            for k, v in raw.get("entries", {}).items()
-                            if isinstance(v, (list, tuple)) and len(v) >= 1}
+                    entries = raw.get("entries", {})
+                    if not isinstance(entries, dict):
+                        raise CacheFormatError(
+                            f"'entries' must be a dict, got "
+                            f"{type(entries).__name__}")
+                    for k, v in entries.items():
+                        # per-entry validation: one corrupted pick retunes
+                        # that key; the rest of the cache stays usable
+                        try:
+                            data[str(k)] = _valid_blocks(v)
+                        except CacheFormatError:
+                            continue
             except (OSError, ValueError, TypeError):
                 data = {}   # corrupt/unreadable cache: retune, then rewrite
         _disk_state["path"] = path
@@ -89,7 +119,9 @@ def disk_put(key: str, blocks: Tuple[int, ...]) -> None:
     if path is None:
         return
     data = disk_cache()
-    data[key] = tuple(int(b) for b in blocks)
+    # strict on the write side: persisting a garbage pick poisons every
+    # later process, so it fails loudly (typed) instead of best-effort
+    data[key] = _valid_blocks(blocks)
     try:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         tmp = f"{path}.tmp.{os.getpid()}"

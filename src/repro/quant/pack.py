@@ -32,11 +32,14 @@ multiplying it back per element.
 """
 from __future__ import annotations
 
+import threading
+import zlib
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # K-dim alignment of the packed buffers: matches the qmatmul kernels'
 # _MIN_TILE so a stored packed view is directly streamable (no repack)
@@ -44,6 +47,53 @@ PACK_ALIGN = 128
 
 # working points with a sub-byte packed representation
 SUB_BYTE_BITS = (4, 2)
+
+
+def _crc32(arr) -> int:
+    """CRC32 of a buffer's raw bytes (the per-region integrity checksum)."""
+    return zlib.crc32(np.ascontiguousarray(np.asarray(arr)).tobytes())
+
+
+@dataclass(frozen=True)
+class Region:
+    """One independently-checksummed buffer of a :class:`PackedWeights`:
+    a tensor's int8 master codes, its f32 per-channel scales, or one cached
+    sub-byte packed view (identified by ``(bits, align)``).  The scrubber
+    walks these; ``nbytes`` is what one verification of the region costs
+    against its rate budget."""
+    tensor: str
+    kind: str                  # "codes" | "scale" | "view"
+    bits: Optional[int] = None     # view regions only
+    align: Optional[int] = None    # view regions only
+    nbytes: int = 0
+
+    def label(self) -> str:
+        if self.kind == "view":
+            return f"{self.tensor}:view(w{self.bits},align={self.align})"
+        return f"{self.tensor}:{self.kind}"
+
+
+@dataclass(frozen=True)
+class RegionMismatch:
+    """A failed region verification: the buffer's bytes no longer hash to
+    the checksum sealed at pack time (a silent-data-corruption detection).
+    ``repairable`` regions (the W4/W2 packed views — nested truncations of
+    the master codes) can be re-derived bit-exactly; master-code or scale
+    corruption has no redundant source and must escalate."""
+    region: Region
+    expected_crc: int
+    actual_crc: int
+
+    @property
+    def repairable(self) -> bool:
+        return self.region.kind == "view"
+
+    def __str__(self) -> str:
+        fix = "repairable from master" if self.repairable else "UNREPAIRABLE"
+        return (f"checksum mismatch in {self.region.label()} "
+                f"({self.region.nbytes} bytes, expected "
+                f"{self.expected_crc:#010x}, got {self.actual_crc:#010x}; "
+                f"{fix})")
 
 
 def _pad_rows(codes, align: int):
@@ -108,13 +158,37 @@ class PackedTensor:
     last axis).  Low-bit working points are derived views of the same codes —
     no storage per point; the W4/W2 views additionally cache a *sub-byte
     packed* buffer (:meth:`packed_view`) so their HBM residency really is
-    bits/8 of the master's."""
+    bits/8 of the master's.
+
+    Every region (master codes, scales, each cached packed view) is sealed
+    with a CRC32 at creation; :meth:`verify` re-hashes the live buffers and
+    reports typed :class:`RegionMismatch` entries for any silent bit flip.
+    Corrupted views are re-derivable from the intact master
+    (:meth:`repair_view` — nested truncation makes repair free); the cache
+    and checksum dicts are lock-guarded because the fleet heal path rebuilds
+    replicas while siblings serve from the same tensors."""
 
     codes: jax.Array     # int8, original weight shape
     scale: jax.Array     # f32, per-output-channel (last dim), keepdims
     # cache key: (bits, K-alignment) — one resident buffer per view
     _packed: Dict[tuple, jax.Array] = field(default_factory=dict, repr=False,
                                             compare=False)
+    # sealed checksums: "codes" / "scale" / ("view", bits, align) -> CRC32
+    _crc: Dict[object, int] = field(default_factory=dict, repr=False,
+                                    compare=False)
+    # guards first-touch view derivation AND checksum (re)sealing
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False,
+                                  compare=False)
+
+    def __post_init__(self):
+        self.seal()
+
+    def seal(self) -> None:
+        """(Re)seal the master-code and scale checksums from the CURRENT
+        buffers (called at pack time)."""
+        with self._lock:
+            self._crc["codes"] = _crc32(self.codes)
+            self._crc["scale"] = _crc32(self.scale)
 
     def view(self, bits: int) -> jax.Array:
         """The ``bits``-bit nested-truncation view of the master codes."""
@@ -143,9 +217,86 @@ class PackedTensor:
             raise ValueError(f"packed_view is for bits in {SUB_BYTE_BITS}, "
                              f"got {bits} (the W8 view IS the master codes)")
         key = (bits, int(align))
-        if key not in self._packed:
-            self._packed[key] = pack_rows(self.codes_2d(), bits, align=align)
-        return self._packed[key]
+        # first-touch derivation is lock-guarded: the fleet heal path builds
+        # a fresh replica's executables while sibling pumps serve from the
+        # same PackedWeights, so two threads may race the cache miss
+        with self._lock:
+            buf = self._packed.get(key)
+            if buf is None:
+                buf = pack_rows(self.codes_2d(), bits, align=align)
+                self._packed[key] = buf
+                self._crc[("view", *key)] = _crc32(buf)
+        return buf
+
+    # -- integrity -----------------------------------------------------------
+    def regions(self, name: str, bits: Optional[int] = None) -> List[Region]:
+        """The checksummed regions of this tensor, filtered by working
+        point: ``None`` = every region; ``8`` = master codes + scales;
+        ``4``/``2`` = that point's cached packed views + the scales (what
+        the sub-byte serving path actually reads)."""
+        regs: List[Region] = []
+        with self._lock:
+            view_keys = list(self._packed)
+        if bits is None or bits == 8:
+            regs.append(Region(name, "codes", nbytes=int(self.codes.size)))
+        regs.append(Region(name, "scale", nbytes=4 * int(self.scale.size)))
+        for (b, align) in view_keys:
+            if bits is None or b == bits:
+                with self._lock:
+                    nb = int(self._packed[(b, align)].size)
+                regs.append(Region(name, "view", bits=b, align=align,
+                                   nbytes=nb))
+        return regs
+
+    def _buffer(self, region: Region):
+        if region.kind == "codes":
+            return self.codes
+        if region.kind == "scale":
+            return self.scale
+        with self._lock:
+            return self._packed.get((region.bits, region.align))
+
+    def _sealed_crc(self, region: Region) -> Optional[int]:
+        key = (region.kind if region.kind != "view"
+               else ("view", region.bits, region.align))
+        with self._lock:
+            return self._crc.get(key)
+
+    def verify_region(self, region: Region) -> Optional[RegionMismatch]:
+        """Re-hash one region against its sealed checksum; ``None`` = clean.
+        An evicted/never-derived view region verifies clean (nothing to
+        corrupt)."""
+        buf = self._buffer(region)
+        expected = self._sealed_crc(region)
+        if buf is None or expected is None:
+            return None
+        actual = _crc32(buf)
+        if actual == expected:
+            return None
+        return RegionMismatch(region, expected, actual)
+
+    def verify(self, name: str, bits: Optional[int] = None
+               ) -> List[RegionMismatch]:
+        return [m for m in (self.verify_region(r)
+                            for r in self.regions(name, bits))
+                if m is not None]
+
+    def repair_view(self, bits: int, align: int = PACK_ALIGN) -> jax.Array:
+        """Re-derive one packed view bit-exactly from the master codes and
+        reseal its checksum — the self-healing half of SDC handling (views
+        are nested truncations, so repair costs one re-pack, no reload).
+        The caller must have verified the master codes first: repairing from
+        a corrupted master would launder the corruption into a 'clean'
+        checksum."""
+        if bits not in SUB_BYTE_BITS:
+            raise ValueError(f"only sub-byte views are repairable, got "
+                             f"bits={bits}")
+        key = (bits, int(align))
+        with self._lock:
+            fresh = pack_rows(self.codes_2d(), bits, align=align)
+            self._packed[key] = fresh
+            self._crc[("view", *key)] = _crc32(fresh)
+        return fresh
 
     @property
     def nbytes(self) -> int:
@@ -201,6 +352,41 @@ class PackedWeights:
     def code_bytes(self) -> int:
         """Bytes of the shared master buffer (codes + scales)."""
         return sum(t.nbytes for t in self.tensors.values())
+
+    # -- integrity -----------------------------------------------------------
+    def regions(self, bits: Optional[int] = None) -> List[Region]:
+        """Every checksummed region across all tensors (see
+        :meth:`PackedTensor.regions` for the ``bits`` filter) — the
+        scrubber's round-robin walk list."""
+        return [r for name, t in self.tensors.items()
+                for r in t.regions(name, bits)]
+
+    def verify_region(self, region: Region) -> Optional[RegionMismatch]:
+        t = self.tensors.get(region.tensor)
+        if t is None:
+            return None
+        return t.verify_region(region)
+
+    def verify(self, bits: Optional[int] = None) -> List[RegionMismatch]:
+        """Re-hash every region (or only the ``bits`` working point's
+        regions) against the checksums sealed at pack time; returns the
+        typed mismatches — ``[]`` means the buffer is clean.  One shared
+        buffer backs every working point on every replica, so this is THE
+        silent-data-corruption detector for the whole fleet."""
+        return [m for name, t in self.tensors.items()
+                for m in t.verify(name, bits)]
+
+    def repair(self, mismatch: RegionMismatch) -> jax.Array:
+        """Repair one *view* mismatch by re-deriving the packed buffer from
+        the (intact) master codes; raises ``ValueError`` for master-code or
+        scale corruption, which has no redundant source here — callers
+        escalate those (replica ejection / rebuild from the original
+        initializers)."""
+        r = mismatch.region
+        if not mismatch.repairable:
+            raise ValueError(f"cannot repair {r.label()}: only derived "
+                             "views re-derive from the master codes")
+        return self.tensors[r.tensor].repair_view(r.bits, align=r.align)
 
     def view_bytes(self, bits: int,
                    caps: Optional[Dict[str, int]] = None) -> int:

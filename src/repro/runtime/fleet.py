@@ -45,6 +45,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 
 from repro.core.adaptive import BrownoutSelector
 from repro.runtime.ft import FailureInjector, StragglerWatchdog
+from repro.runtime.integrity import CanarySet, IntegrityError
 from repro.runtime.scheduler import QueueFull
 from repro.runtime.serve import AccelServer, Ticket
 
@@ -220,6 +221,7 @@ class Replica:
         self.readmissions = 0
         self.generation = 0      # how many times the server was (re)built
         self.ejected_at: Optional[float] = None
+        self.eject_cause: Optional[str] = None   # why the LAST ejection fired
 
     # -- scoring (caller holds the router lock) ------------------------------
     def record_success(self, latency_s: float) -> bool:
@@ -256,6 +258,7 @@ class Replica:
             "ejections": self.ejections,
             "readmissions": self.readmissions,
             "generation": self.generation,
+            "eject_cause": self.eject_cause,
             "breaker": {"open": self.breaker.open,
                         "trips": self.breaker.trips},
             "straggler_flags": len(self.watchdog.flagged),
@@ -352,6 +355,7 @@ class FleetRouter:
                  hedge_after_s: Optional[float] = None,
                  default_deadline_s: float = 30.0,
                  probe: Optional[Sequence[Any]] = None,
+                 canaries: Optional[CanarySet] = None,
                  probe_interval_s: float = 0.05,
                  probe_timeout_s: float = 2.0,
                  heal_cooldown_s: float = 0.25,
@@ -378,6 +382,12 @@ class FleetRouter:
         self.hedge_after_s = hedge_after_s
         self.default_deadline_s = default_deadline_s
         self.probe_inputs = tuple(probe) if probe is not None else None
+        # semantic canaries: probes with known-good expected outputs (any
+        # working point's fingerprint within tolerance passes) — corruption
+        # the checksums can't see becomes eject-worthy
+        self.canaries = canaries
+        if canaries is not None and self.probe_inputs is None:
+            self.probe_inputs = canaries.inputs(0)
         self.probe_interval_s = probe_interval_s
         self.probe_timeout_s = probe_timeout_s
         self.heal_cooldown_s = heal_cooldown_s
@@ -398,6 +408,7 @@ class FleetRouter:
         self.shed = 0
         self.deadlines_exceeded = 0
         self.probes = 0
+        self.canary_failures = 0
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "FleetRouter":
@@ -507,7 +518,7 @@ class FleetRouter:
                 with self._lock:
                     rep.record_failure()
                     if rep.server is srv and srv.fatal is not None:
-                        self._eject(rep)
+                        self._eject(rep, cause=self._fatal_cause(srv))
                 tried.add(rep.name)
                 continue
             with self._lock:
@@ -669,7 +680,7 @@ class FleetRouter:
                 # a failure from a pre-heal generation must not eject the
                 # freshly rebuilt replica
                 if rep.server is att.server and att.server.fatal is not None:
-                    self._eject(rep)
+                    self._eject(rep, cause=self._fatal_cause(att.server))
                 elif (rep.err_ewma > ERR_SUSPECT or rep.breaker.open) \
                         and rep.state == HealthState.HEALTHY:
                     rep.state = HealthState.SUSPECT
@@ -734,11 +745,21 @@ class FleetRouter:
                                        deadline_s=deadline_s, tenant=tenant))
 
     # -- health machine ------------------------------------------------------
-    def _eject(self, rep: Replica) -> None:
+    @staticmethod
+    def _fatal_cause(srv: Optional[AccelServer]) -> str:
+        """Name a dead pump's ejection: ``quarantined`` when the scrubber's
+        typed IntegrityError killed it (weight-memory corruption), else the
+        generic ``dead-pump``."""
+        if srv is not None and isinstance(srv.fatal, IntegrityError):
+            return "quarantined"
+        return "dead-pump"
+
+    def _eject(self, rep: Replica, cause: str = "dead-pump") -> None:
         """Caller holds the lock."""
         if rep.state != HealthState.EJECTED:
             rep.state = HealthState.EJECTED
             rep.ejections += 1
+            rep.eject_cause = cause
         rep.ejected_at = time.monotonic()
 
     def _readmit(self, rep: Replica) -> None:
@@ -749,21 +770,26 @@ class FleetRouter:
         rep.ejected_at = None
         rep.breaker.record_success()
 
-    def _probe(self, rep: Replica) -> bool:
-        """Serve one canary request end-to-end through the replica (outside
-        the router lock — probes ride the real request path)."""
+    def _probe(self, rep: Replica) -> Optional[str]:
+        """Serve one probe request end-to-end through the replica (outside
+        the router lock — probes ride the real request path).  Returns None
+        on success, or the failure cause: ``probe`` (the request errored)
+        or ``canary`` (it answered, but outside every working point's
+        captured fingerprint — semantic corruption)."""
         srv = rep.server
         if srv is None or not srv.alive:
-            return False
+            return "probe"
         with self._lock:
             self.probes += 1
-        if self.probe_inputs is None:
-            return True                 # aliveness-only probe
+            idx = self.probes - 1
+        if self.probe_inputs is None and self.canaries is None:
+            return None                 # aliveness-only probe
+        inputs = (self.canaries.inputs(idx) if self.canaries is not None
+                  else self.probe_inputs)
         tk = None
         try:
-            tk = srv.submit(*self.probe_inputs)
-            srv.result(tk, timeout=self.probe_timeout_s)
-            return True
+            tk = srv.submit(*inputs)
+            val = srv.result(tk, timeout=self.probe_timeout_s)
         except Exception:
             if tk is not None:
                 try:
@@ -772,7 +798,12 @@ class FleetRouter:
                     srv.drop(tk)
                 except Exception:       # dead server / already consumed
                     pass
-            return False
+            return "probe"
+        if self.canaries is not None and not self.canaries.check(idx, val):
+            with self._lock:
+                self.canary_failures += 1
+            return "canary"
+        return None
 
     def _sentinel_loop(self) -> None:
         while not self._stop_evt.wait(self.probe_interval_s):
@@ -790,7 +821,7 @@ class FleetRouter:
                 dead = srv is None or srv.fatal is not None or not srv.alive
                 if dead and rep.state not in (HealthState.EJECTED,
                                               HealthState.PROBING):
-                    self._eject(rep)
+                    self._eject(rep, cause=self._fatal_cause(srv))
                 state, ejected_at = rep.state, rep.ejected_at
             if state == HealthState.EJECTED:
                 if ejected_at is None or now - ejected_at < self.heal_cooldown_s:
@@ -805,7 +836,8 @@ class FleetRouter:
                     rep.state = HealthState.PROBING
                 state = HealthState.PROBING
             if state in (HealthState.PROBING, HealthState.SUSPECT):
-                ok = self._probe(rep)
+                cause = self._probe(rep)
+                ok = cause is None
                 with self._lock:
                     if ok and rep.state == HealthState.PROBING:
                         self._readmit(rep)
@@ -814,7 +846,12 @@ class FleetRouter:
                         rep.state = HealthState.HEALTHY
                     elif not ok:
                         rep.record_failure()
-                        self._eject(rep)
+                        srv2 = rep.server
+                        if srv2 is None or srv2.fatal is not None:
+                            # the pump died under the probe: name the death,
+                            # not the probe (quarantined beats probe)
+                            cause = self._fatal_cause(srv2)
+                        self._eject(rep, cause=cause)
         if self.brownout is not None:
             depth = 0
             for rep in reps:
@@ -840,11 +877,26 @@ class FleetRouter:
                 "shed": self.shed,
                 "deadlines_exceeded": self.deadlines_exceeded,
                 "probes": self.probes,
+                "canary_failures": self.canary_failures,
                 "availability": (self.succeeded / resolved if resolved
                                  else 1.0),
                 "replicas": {n: r.snapshot()
                              for n, r in self.replicas.items()},
             }
+            # aggregate weight-memory integrity telemetry across every
+            # replica server with an attached scrubber
+            scrubs = [rep.server.scrubber for rep in self.replicas.values()
+                      if rep.server is not None
+                      and rep.server.scrubber is not None]
+        if scrubs:
+            tels = [sc.telemetry() for sc in scrubs]
+            s["integrity"] = {
+                key: sum(t[key] for t in tels)
+                for key in ("scrubbed_bytes", "scrub_passes",
+                            "detected_flips", "repaired_views",
+                            "quarantines")}
+            s["integrity"]["quarantined"] = sorted(
+                {lbl for t in tels for lbl in t["quarantined"]})
         if self.brownout is not None:
             s["brownout"] = self.brownout.telemetry()
         return s

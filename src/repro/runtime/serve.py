@@ -38,9 +38,9 @@ from repro.runtime.scheduler import (CoalescingScheduler, LatencyEWMA,
 from repro.sharding import batch_axes
 
 __all__ = [
-    "AccelServer", "AdaptiveLMServer", "BatchReport", "QueueFull",
-    "ServeMetrics", "ServerStopped", "ServiceObjective", "Ticket",
-    "decode_state_shardings", "greedy_generate", "make_decode_step",
+    "AccelServer", "AdaptiveLMServer", "BatchReport", "NumericalFault",
+    "QueueFull", "ServeMetrics", "ServerStopped", "ServiceObjective",
+    "Ticket", "decode_state_shardings", "greedy_generate", "make_decode_step",
     "make_prefill_step",
 ]
 
@@ -49,6 +49,16 @@ class ServerStopped(RuntimeError):
     """Typed shutdown error: the server stopped (or its stop timed out)
     before this request was served.  Callers that retry elsewhere (the fleet
     router) can distinguish it from an execution failure."""
+
+
+class NumericalFault(RuntimeError):
+    """Typed demux error: a request's output rows contained non-finite
+    values (NaN/Inf — corrupted weights, a numerically unstable trace, an
+    SEU the checksums have not caught yet).  The poisoned rows are withheld:
+    the member ticket resolves to this error instead of silently returning
+    garbage, and the tenant's ``numerical_faults`` counter increments.
+    Like :class:`ServerStopped` it survives :meth:`AccelServer.result`
+    un-wrapped so the fleet router can retry the request elsewhere."""
 
 
 def decode_state_shardings(cfg: ModelConfig, state, mesh: Mesh):
@@ -320,6 +330,7 @@ class _Tenant:
         self.reports: Deque[BatchReport] = deque(maxlen=history)
         self.latencies: Deque[float] = deque(maxlen=history)
         self.executed_batches = 0
+        self.numerical_faults = 0   # requests withheld by the NaN/Inf guard
 
     # legacy views of the unified selector, kept for telemetry/test surfaces
     @property
@@ -420,6 +431,7 @@ class AccelServer:
         self._stopping = False
         self._drain_on_stop = True
         self._fatal: Optional[BaseException] = None
+        self._scrubber = None   # attach_scrubber: weight-memory integrity
         # per-batch executable failures survive here in async mode, where no
         # caller frame exists for pump() to re-raise into
         self.pump_errors: Deque[BaseException] = deque(maxlen=64)
@@ -597,6 +609,13 @@ class AccelServer:
         return _Pending(ten, batch, tuple(out if multi else (out,)), multi,
                         point, bits, t0)
 
+    @staticmethod
+    def _finite(sliced: Tuple[np.ndarray, ...]) -> bool:
+        """True when every float output slice is NaN/Inf-free (integer
+        outputs — token ids — vacuously pass)."""
+        return all(np.isfinite(o).all()
+                   for o in sliced if np.issubdtype(o.dtype, np.floating))
+
     def _finish(self, pending: _Pending) -> None:
         # forcing to numpy blocks on the device; everything after is host
         outs = tuple(np.asarray(o) for o in pending.outs)
@@ -609,6 +628,14 @@ class AccelServer:
                 sliced = tuple(o[off:off + r.size] for o in outs)
                 if r.rid in ten.dropped:
                     ten.dropped.discard(r.rid)   # abandoned pre-execution
+                elif not self._finite(sliced):
+                    # poisoned rows are withheld per request, not per batch:
+                    # a NaN in one member's slice must not fail its batch
+                    # neighbours (padding made them share an execution only)
+                    ten.numerical_faults += 1
+                    self._resolve(ten, r.rid, _BatchFailure(NumericalFault(
+                        f"request {r.rid} (tenant {ten.name!r}) produced "
+                        "non-finite outputs; rows withheld")))
                 else:
                     self._resolve(ten, r.rid,
                                   sliced if pending.multi else sliced[0])
@@ -770,6 +797,30 @@ class AccelServer:
         selector's backlog signal."""
         with self._lock:
             return sum(len(t.scheduler) for t in self.tenants.values())
+
+    def attach_scrubber(self, scrubber) -> None:
+        """Wire a :class:`~repro.runtime.integrity.Scrubber` over this
+        server's weight buffer: unrepairable corruption (master codes or
+        scales) becomes a fatal typed
+        :class:`~repro.runtime.integrity.IntegrityError` — the pump dies,
+        every outstanding ticket resolves to the error, new work is refused,
+        so no post-detection corrupted result is ever served — and the fleet
+        sentinel sees ``fatal`` and ejects the replica with a
+        ``quarantined`` cause.  The scrubber's telemetry surfaces under
+        ``stats()["integrity"]``.  Lifecycle stays the caller's: attach
+        does not :meth:`~repro.runtime.integrity.Scrubber.start` it."""
+        from repro.runtime.integrity import IntegrityError
+
+        def _quarantine(mismatch):
+            self._die(IntegrityError(
+                f"weight memory quarantined: {mismatch}", [mismatch]))
+
+        self._scrubber = scrubber
+        scrubber.add_on_quarantine(_quarantine)
+
+    @property
+    def scrubber(self):
+        return self._scrubber
 
     def set_selector(self, selector: Optional[PointSelector],
                      tenant: str = "default") -> None:
@@ -974,8 +1025,8 @@ class AccelServer:
             res = ten.results.pop(rid)   # double claim / dropped: KeyError
             ten.tickets.pop(rid, None)
         if isinstance(res, _BatchFailure):
-            if isinstance(res.error, ServerStopped):
-                raise res.error    # typed shutdown must survive the claim
+            if isinstance(res.error, (ServerStopped, NumericalFault)):
+                raise res.error    # typed errors must survive the claim
             raise RuntimeError(
                 f"batch execution failed for ticket {rid}: {res.error}"
             ) from res.error
@@ -1027,6 +1078,7 @@ class AccelServer:
             s["p50_latency_s"] = percentile(ten.latencies, 0.50)
             s["p95_latency_s"] = percentile(ten.latencies, 0.95)
         s["executed_batches"] = ten.executed_batches
+        s["numerical_faults"] = ten.numerical_faults
         s["weight"] = ten.weight
         s["points"] = dict(Counter(r.point for r in ten.reports
                                    if r.point is not None))
@@ -1061,12 +1113,14 @@ class AccelServer:
             if len(self.tenants) == 1:
                 s = self._tenant_stats(next(iter(self.tenants.values())))
                 s["pump_errors"] = len(self.pump_errors)
+                if self._scrubber is not None:
+                    s["integrity"] = self._scrubber.telemetry()
                 return s
             per = {n: self._tenant_stats(t) for n, t in self.tenants.items()}
             agg: Dict[str, Any] = {"tenants": per}
             for key in ("submitted", "split_requests", "split_chunks",
                         "scheduled_batches", "scheduled_rows", "padded_rows",
-                        "pending", "executed_batches"):
+                        "pending", "executed_batches", "numerical_faults"):
                 agg[key] = sum(p.get(key, 0) for p in per.values())
             rows = agg["scheduled_rows"] + agg["padded_rows"]
             agg["padding_waste"] = agg["padded_rows"] / rows if rows else 0.0
@@ -1076,4 +1130,6 @@ class AccelServer:
                 agg["p50_latency_s"] = percentile(all_lat, 0.50)
                 agg["p95_latency_s"] = percentile(all_lat, 0.95)
             agg["pump_errors"] = len(self.pump_errors)
+            if self._scrubber is not None:
+                agg["integrity"] = self._scrubber.telemetry()
             return agg

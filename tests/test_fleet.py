@@ -473,7 +473,7 @@ def test_probe_failure_drops_canary_ticket():
             rep = r.replicas["a"]
             srv = rep.server
             for _ in range(3):
-                assert r._probe(rep) is False   # canary times out
+                assert r._probe(rep) == "probe"   # canary times out
             gate.set()
             deadline = time.monotonic() + 5.0
             while time.monotonic() < deadline \
